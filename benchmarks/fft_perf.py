@@ -1,0 +1,81 @@
+"""FFT §Perf sweep: paper-faithful baseline vs beyond-paper variants.
+
+Runs the 1024^3 (and optionally 4096^3) pencil transform through the
+hillclimb axes on the production mesh and records roofline terms per
+variant:
+
+  baseline        natural layout, K=2, plan cache, matmul local FFT
+                  (CROFT option 4 — the paper-faithful configuration)
+  k1 / k4 / k8    overlap-chunk sweep (paper's K knob)
+  no-plan         option 3 (twiddles rematerialized per call)
+  spectral        beyond-paper: skip the restoring transposes
+  xla-fft         XLA's native FFT op as the local kernel
+  slab            the FFTW3-model decomposition
+  spectral+k4     combined best
+
+Usage: XLA flag is set by the module itself (production mesh);
+    PYTHONPATH=src python -m benchmarks.fft_perf [--grid fft_4096]
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.core.distributed import FFTOptions
+
+
+VARIANTS = {
+    "baseline-opt4": FFTOptions(overlap_k=2, plan_cache=True),
+    "k1-no-overlap": FFTOptions(overlap_k=1),
+    "k4": FFTOptions(overlap_k=4),
+    "k8": FFTOptions(overlap_k=8),
+    "opt3-no-plan": FFTOptions(overlap_k=2, plan_cache=False),
+    "spectral": FFTOptions(overlap_k=2, output_layout="spectral"),
+    "xla-fft": FFTOptions(overlap_k=2, local_impl="xla"),
+    "stockham": FFTOptions(overlap_k=2, local_impl="stockham"),
+    "spectral+k4": FFTOptions(overlap_k=4, output_layout="spectral"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="fft_1024")
+    ap.add_argument("--out", default="results/fft_perf")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--slab", action="store_true", help="include slab row")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from repro.launch.dryrun import lower_fft_cell  # after XLA_FLAGS
+
+    rows = []
+    for name, opts in VARIANTS.items():
+        rec = lower_fft_cell(args.grid, args.multi_pod, "pencil", opts)
+        rec["variant"] = name
+        rows.append(rec)
+        r = rec.get("roofline", {})
+        print(f"{name:16s} status={rec['status']} "
+              f"compute={r.get('compute_s', 0):.6f}s "
+              f"memory={r.get('memory_s', 0):.6f}s "
+              f"coll={r.get('collective_s', 0):.6f}s "
+              f"a2a_ops={rec.get('collectives', {}).get('all-to-all', {}).get('count', 0)}",
+              flush=True)
+        with open(os.path.join(args.out, f"{args.grid}-{name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if args.slab:
+        rec = lower_fft_cell(args.grid, args.multi_pod, "slab", FFTOptions())
+        rec["variant"] = "slab"
+        with open(os.path.join(args.out, f"{args.grid}-slab.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec.get("roofline", {})
+        print(f"{'slab':16s} status={rec['status']} "
+              f"memory={r.get('memory_s', 0):.6f}s "
+              f"coll={r.get('collective_s', 0):.6f}s")
+
+
+if __name__ == "__main__":
+    main()

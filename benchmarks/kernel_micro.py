@@ -1,0 +1,44 @@
+"""Measured kernel microbenchmarks on this host (derived=0).
+
+Pallas kernels run in interpret mode on CPU (validation mode, not perf
+mode), so their absolute numbers are not TPU projections — the measured
+rows exist to track regressions and to time the pure-jnp implementations
+the distributed transform actually lowers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import local_fft
+from repro.kernels import fft_matmul_1d, spectral_scale_op
+
+
+def run():
+    rng = np.random.RandomState(0)
+    for n in [1024, 4096]:
+        x = jnp.asarray((rng.randn(32, n) + 1j * rng.randn(32, n))
+                        .astype(np.complex64))
+        for name, fn in [
+            ("fft-matmul-jnp", jax.jit(lambda v: local_fft.fft_matmul(v))),
+            ("fft-stockham-jnp", jax.jit(lambda v: local_fft.fft_stockham(v))),
+            ("fft-xla", jax.jit(lambda v: jnp.fft.fft(v))),
+        ]:
+            emit(f"micro/{name}/b32xn{n}", time_fn(fn, x), False)
+        emit(f"micro/fft-matmul-pallas-interpret/b32xn{n}",
+             time_fn(lambda v: fft_matmul_1d(v), x), False)
+    h = jnp.asarray((rng.randn(4096) + 1j * rng.randn(4096))
+                    .astype(np.complex64))
+    x = jnp.asarray((rng.randn(32, 4096) + 1j * rng.randn(32, 4096))
+                    .astype(np.complex64))
+    emit("micro/spectral-scale-pallas-interpret/b32xn4096",
+         time_fn(lambda v: spectral_scale_op(v, h), x), False)
+
+    # end-to-end local 3-D transform (the per-pencil workload of one chip)
+    g = jnp.asarray((rng.randn(128, 16, 16)
+                     + 1j * rng.randn(128, 16, 16)).astype(np.complex64))
+    fwd = jax.jit(lambda v: local_fft.fft3d_local(v, impl="matmul"))
+    emit("micro/fft3d-local-128x16x16", time_fn(fwd, g), False)

@@ -1,0 +1,66 @@
+"""The 40-cell (arch x shape) roofline table, read from dry-run artifacts.
+
+Emits per-cell modeled step time (us) plus the three roofline terms; the
+full table (with bottleneck labels and MFU) lands in EXPERIMENTS.md via
+``python -m benchmarks.lm_roofline --write``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, emit, load_dryrun
+from repro.configs import ASSIGNED, SHAPES
+
+
+def iter_cells(mesh_tag: str = "sp"):
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            rec = load_dryrun(f"{arch}-{shape}-{mesh_tag}")
+            yield arch, shape, rec
+
+
+def run():
+    n = 0
+    for arch, shape, rec in iter_cells("sp"):
+        if rec is None:
+            continue
+        r = rec["roofline"]
+        emit(f"roofline/{arch}/{shape}/step", r["step_time_s"] * 1e6, True)
+        emit(f"roofline/{arch}/{shape}/mfu_pct", 100 * r["mfu"], True)
+        n += 1
+    emit("roofline/cells-available", n, True)
+
+
+def table_markdown(mesh_tag: str = "sp") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL_FLOPs/HLO | MFU |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch, shape, rec in iter_cells(mesh_tag):
+        if rec is None:
+            name = f"{arch}-{shape}-{mesh_tag}"
+            path = os.path.join(DRYRUN_DIR, name + ".json")
+            note = "missing"
+            if os.path.exists(path):
+                with open(path) as f:
+                    d = json.load(f)
+                note = d.get("status") + ": " + d.get(
+                    "reason", d.get("error", ""))[:60]
+            rows.append(f"| {arch} | {shape} | — | — | — | {note} | — | — |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_fraction']:.2f} | "
+            f"{100 * r['mfu']:.1f}% |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--write" in sys.argv:
+        print(table_markdown())
+    else:
+        run()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,derived``
+CSV rows (derived=0: measured on this host; 1: modeled from compiled
+artifacts / roofline constants — no TPU in this container).
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for modname in ["benchmarks.fft_tables", "benchmarks.collective_profile",
+                    "benchmarks.kernel_micro", "benchmarks.lm_roofline",
+                    "benchmarks.train_bench"]:
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failures.append((modname, e))
+            print(f"# ERROR in {modname}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Measured train/serve step times for smoke configs on this host
+(derived=0) — the framework's end-to-end latency sanity row — plus modeled
+production step times from the dry-run artifacts (derived=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, load_dryrun, time_fn
+from repro.configs import get_config
+from repro.train import OptConfig, init_train_state, make_train_step
+from repro.train.data import SyntheticDataset
+
+
+def run():
+    for arch in ["yi-9b", "rwkv6-3b"]:
+        cfg = get_config(arch, smoke=True)
+        ocfg = OptConfig(lr=1e-3)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, ocfg, None)
+        step = make_train_step(cfg, ocfg, None, 4, kv_block=32, donate=False)
+        ds = SyntheticDataset(cfg.vocab, 64, 4)
+        batch = ds.batch_at(0)
+        us = time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                     warmup=1, iters=3)
+        emit(f"train/smoke-step/{arch}", us, False)
+
+    # production cells: modeled step time from the compiled dry-run
+    for cell in ["yi-34b-train_4k-sp", "mixtral-8x22b-train_4k-sp",
+                 "deepseek-v2-236b-train_4k-sp", "rwkv6-3b-decode_32k-sp"]:
+        rec = load_dryrun(cell)
+        if rec:
+            emit(f"train/modeled-step/{cell}",
+                 rec["roofline"]["step_time_s"] * 1e6, True)

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill a prompt batch, decode with greedy or
+temperature sampling through the ring/latent/recurrent caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-236b \
+        --temperature 0.8
+"""
+
+import argparse
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    serve_cli.main(["--arch", args.arch, "--smoke",
+                    "--batch", str(args.batch),
+                    "--prompt-len", str(args.prompt_len),
+                    "--gen-len", str(args.gen_len),
+                    "--temperature", str(args.temperature)])
+
+
+if __name__ == "__main__":
+    main()

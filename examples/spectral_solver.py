@@ -1,0 +1,99 @@
+"""Pseudo-spectral PDE driver on CROFT: periodic Poisson solve + a few
+steps of 3-D viscous Burgers — the HPC workload class the paper targets
+(turbulence codes built on distributed 3-D FFTs).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/spectral_solver.py --devices 8
+
+Uses the beyond-paper ``spectral`` output layout: forward stays in z-pencil
+layout, the frequency-domain multiply runs on the sharded spectrum, and the
+inverse consumes it directly — the two restoring transposes the paper's
+natural layout pays per round trip are skipped entirely.
+"""
+
+import argparse
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Croft3D, Decomposition, FFTOptions, poisson_solve
+
+
+def wavenumbers(n):
+    return jnp.fft.fftfreq(n, d=1.0 / n)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--nu", type=float, default=0.05)
+    args = ap.parse_args()
+
+    n = args.n
+    if args.devices > 1:
+        mesh = jax.make_mesh((2, args.devices // 2), ("y", "z"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        decomp = Decomposition("pencil", ("y", "z"))
+    else:
+        mesh = decomp = None
+    plan = Croft3D((n, n, n), mesh, decomp,
+                   FFTOptions(output_layout="spectral"))
+
+    # --- Poisson: manufactured solution ------------------------------------
+    g = 2 * math.pi * np.arange(n) / n
+    X, Y, Z = np.meshgrid(g, g, g, indexing="ij")
+    u_true = np.sin(X) * np.cos(2 * Y) * np.sin(3 * Z)
+    f = -(1 + 4 + 9) * u_true
+    fd = jnp.asarray(f, jnp.complex64)
+    if mesh is not None:
+        fd = jax.device_put(fd, plan.input_sharding)
+    u = poisson_solve(fd, plan)
+    err = float(jnp.max(jnp.abs(jnp.real(u) - u_true)))
+    print(f"Poisson {n}^3: max error {err:.2e}")
+
+    # --- viscous Burgers (scalar, semi-implicit spectral stepping) ---------
+    kx = wavenumbers(n)[:, None, None]
+    ky = wavenumbers(n)[None, :, None]
+    kz = wavenumbers(n)[None, None, :]
+    k2 = kx ** 2 + ky ** 2 + kz ** 2
+    if mesh is not None:
+        k2 = jax.device_put(k2, plan.output_sharding)
+        kxs = jax.device_put(jnp.broadcast_to(kx, (n, n, n)),
+                             plan.output_sharding)
+    else:
+        kxs = jnp.broadcast_to(kx, (n, n, n))
+
+    u = jnp.asarray(np.sin(X) * np.cos(Y) * np.cos(Z), jnp.complex64)
+    if mesh is not None:
+        u = jax.device_put(u, plan.input_sharding)
+    dt = 0.01
+
+    @jax.jit
+    def step(u):
+        u_hat = plan.forward(u)
+        ux = plan.inverse(1j * kxs.astype(jnp.complex64) * u_hat)
+        rhs = -u * ux                       # nonlinear term in real space
+        rhs_hat = plan.forward(rhs)
+        u_hat_new = (u_hat + dt * rhs_hat) / (1 + dt * args.nu * k2)
+        return plan.inverse(u_hat_new)
+
+    e0 = float(jnp.mean(jnp.abs(u) ** 2))
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        u = step(u)
+    jax.block_until_ready(u)
+    dt_wall = (time.perf_counter() - t0) / args.steps
+    e1 = float(jnp.mean(jnp.abs(u) ** 2))
+    print(f"Burgers {args.steps} steps: energy {e0:.4f} -> {e1:.4f} "
+          f"(viscous decay expected), {dt_wall * 1e3:.1f} ms/step")
+    assert e1 < e0, "viscosity must dissipate energy"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""CROFT core: pencil-decomposed distributed 3-D FFT (paper's contribution)."""
+
+from repro.core.api import Croft3D, auto_pencil, poisson_solve
+from repro.core.decomposition import Decomposition, pencil_grid_for
+from repro.core.distributed import (FFTOptions, distributed_fft3d, fft3d,
+                                    ifft3d)
+from repro.core.local_fft import (fft3d_local, fft_1d, fft_matmul,
+                                  fft_stockham, fft_xla)
+from repro.core.plan import FFTPlan, clear_plan_cache, make_plan
+
+__all__ = [
+    "Croft3D", "Decomposition", "FFTOptions", "FFTPlan", "auto_pencil",
+    "clear_plan_cache", "distributed_fft3d", "fft3d", "fft3d_local", "fft_1d",
+    "fft_matmul", "fft_stockham", "fft_xla", "ifft3d", "make_plan",
+    "pencil_grid_for", "poisson_solve",
+]

@@ -1,0 +1,139 @@
+"""Decomposition descriptors: slab (1-D), pencil (2-D), cell (3-D).
+
+Paper §2.2.  A descriptor binds the decomposition kind to mesh axis names and
+validates the divisibility/scaling constraints the paper derives:
+
+  slab    P_max = Nz                (FFTW3's limitation, §2.2.1 / §3.1)
+  pencil  P_max = Ny * Nz           (CROFT, P3DFFT, 2DECOMP&FFT)
+  cell    P_max = Nx * Ny * Nz      (rarely used; highest comm volume)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Decomposition:
+    """How an (Nx, Ny, Nz) grid maps onto mesh axes.
+
+    ``axes`` are mesh axis names, one per decomposed grid dimension:
+      slab:   (z_axis,)                 grid dim 2 sharded
+      pencil: (y_axis, z_axis)          grid dims 1, 2 sharded (x-pencils)
+      cell:   (x_axis, y_axis, z_axis)  all three sharded
+    Each entry may itself be a tuple of mesh axes (folded, e.g. ("pod","data")).
+    """
+
+    kind: str  # "slab" | "pencil" | "cell"
+    axes: tuple  # of str or tuple[str, ...]
+
+    def __post_init__(self):
+        expect = {"slab": 1, "pencil": 2, "cell": 3}
+        if self.kind not in expect:
+            raise ValueError(f"unknown decomposition kind {self.kind!r}")
+        if len(self.axes) != expect[self.kind]:
+            raise ValueError(
+                f"{self.kind} needs {expect[self.kind]} mesh axes, got {self.axes}")
+
+    def axis_sizes(self, mesh: Mesh) -> tuple[int, ...]:
+        def size(a):
+            if isinstance(a, tuple):
+                return math.prod(mesh.shape[x] for x in a)
+            return mesh.shape[a]
+        return tuple(size(a) for a in self.axes)
+
+    def n_procs(self, mesh: Mesh) -> int:
+        return math.prod(self.axis_sizes(mesh))
+
+    def partition_spec(self) -> P:
+        """Input/output PartitionSpec for the natural (x-aligned) layout."""
+        if self.kind == "slab":
+            return P(None, None, self.axes[0])
+        if self.kind == "pencil":
+            return P(None, self.axes[0], self.axes[1])
+        return P(self.axes[0], self.axes[1], self.axes[2])
+
+    def spectral_spec(self) -> P:
+        """Output layout when the restoring transposes are skipped.
+
+        pencil: z-pencils — x sharded over the y-communicator axes, y over
+        the z-communicator axes (P3DFFT-style spectral layout).
+        """
+        if self.kind == "slab":
+            return P(self.axes[0], None, None)
+        if self.kind == "pencil":
+            return P(self.axes[0], self.axes[1], None)
+        return P(self.axes[0], self.axes[1], self.axes[2])
+
+    def validate(self, shape: Sequence[int], mesh: Mesh, overlap_k: int = 1) -> None:
+        nx, ny, nz = shape[-3], shape[-2], shape[-1]
+        sizes = self.axis_sizes(mesh)
+        if self.kind == "slab":
+            (pz,) = sizes
+            if pz > nz:
+                raise ValueError(
+                    f"slab decomposition limited to P <= Nz: P={pz} > Nz={nz} "
+                    "(the FFTW3 scaling wall, paper table 1)")
+            _check_div("Nz", nz, pz)
+            _check_div("Nx", nx, pz)  # needed by the x<->z transpose
+            if overlap_k > 1:
+                _check_div("Ny (overlap chunks)", ny, overlap_k)
+        elif self.kind == "pencil":
+            py, pz = sizes
+            if py * pz > ny * nz:
+                raise ValueError(f"pencil needs P <= Ny*Nz, got {py*pz} > {ny*nz}")
+            _check_div("Ny", ny, py)
+            _check_div("Nz", nz, pz)
+            _check_div("Nx", nx, py)   # x<->y transpose
+            _check_div("Ny", ny, pz)   # y<->z transpose
+            if overlap_k > 1:
+                _check_div("Nz/Pz (stage-1 chunks)", nz // pz, overlap_k)
+                _check_div("Nx/Py (stage-2 chunks)", nx // py, overlap_k)
+        else:  # cell
+            px, py, pz = sizes
+            _check_div("Nx", nx, px * py)
+            _check_div("Ny", ny, py)
+            _check_div("Nz", nz, pz)
+
+    def sharding(self, mesh: Mesh, layout: str = "natural") -> NamedSharding:
+        spec = self.partition_spec() if layout == "natural" else self.spectral_spec()
+        return NamedSharding(mesh, spec)
+
+    def local_shape(self, shape: Sequence[int], mesh: Mesh) -> tuple[int, ...]:
+        nx, ny, nz = shape[-3], shape[-2], shape[-1]
+        sizes = self.axis_sizes(mesh)
+        if self.kind == "slab":
+            return (nx, ny, nz // sizes[0])
+        if self.kind == "pencil":
+            return (nx, ny // sizes[0], nz // sizes[1])
+        return (nx // sizes[0], ny // sizes[1], nz // sizes[2])
+
+
+def _check_div(name: str, n: int, p: int) -> None:
+    if n % p != 0:
+        raise ValueError(f"{name}={n} not divisible by {p}")
+
+
+def pencil_grid_for(n_procs: int, ny: int, nz: int) -> tuple[int, int]:
+    """Pick a near-square Py x Pz = n_procs factorization (paper fig. 5).
+
+    Prefers Py <= Pz and respects Py | Ny, Pz | Nz.
+    """
+    best = None
+    for py in range(1, n_procs + 1):
+        if n_procs % py:
+            continue
+        pz = n_procs // py
+        if ny % py or nz % pz:
+            continue
+        score = abs(math.log2(py) - math.log2(pz))
+        if best is None or score < best[0]:
+            best = (score, py, pz)
+    if best is None:
+        raise ValueError(f"no valid pencil grid for P={n_procs}, Ny={ny}, Nz={nz}")
+    return best[1], best[2]

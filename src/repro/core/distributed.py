@@ -1,0 +1,322 @@
+"""Distributed 3-D FFT: pencil / slab / cell decompositions with K-chunked
+compute-communication overlap (the paper's core contribution, §4-§5).
+
+Mapping from the paper's MPI+OpenMP design to JAX/XLA (DESIGN.md §2):
+
+  row/column MPI communicators  ->  mesh axes inside ``shard_map``
+  MPI_Alltoall                  ->  ``jax.lax.all_to_all`` (split/concat axes
+                                    express the pack/unpack steps 2,4,6,8)
+  OpenMP comm thread + K chunks ->  K independent (FFT chunk -> all_to_all)
+                                    chains; chunk i's collective has no data
+                                    dependence on chunk i+1's FFT, so XLA's
+                                    async collective scheduler overlaps them.
+                                    K=1 reproduces options 1/2 (no overlap),
+                                    K>=2 reproduces options 3/4 (CROFT default
+                                    K=2, paper §5.1).
+  FFTW plan reuse               ->  plan-constant caching (plan.py); disabled
+                                    = "multiple plans" options 1/3.
+
+The FFTW3 baseline the paper benchmarks against is represented two ways:
+slab decomposition (its scaling model) and ``transpose_impl="pairwise"``
+(its communication pattern: P-1 pairwise exchanges standing in for
+MPI_Sendrecv, reproducing the "864 calls vs 64 calls" profile of figs 12-15).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import local_fft
+from repro.core.decomposition import Decomposition
+
+AxisName = Union[str, tuple]
+
+
+def _axis_size(axis: AxisName) -> int:
+    """Size of a (possibly folded) mesh axis from inside shard_map."""
+    if isinstance(axis, tuple):
+        return math.prod(jax.lax.axis_size(a) for a in axis)
+    return jax.lax.axis_size(axis)
+
+
+def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
+                concat_axis: int, impl: str = "alltoall") -> jax.Array:
+    """Global transpose along one communicator.
+
+    ``impl="alltoall"``  one fused collective (CROFT's MPI_Alltoall).
+    ``impl="pairwise"``  P-1 ppermute exchanges (FFTW3's MPI_Sendrecv
+                         pattern) — numerically identical, many more
+                         collective ops; used for the figs 12-15 benchmark.
+    """
+    if impl == "alltoall":
+        return jax.lax.all_to_all(blk, axis, split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+    if impl != "pairwise":
+        raise ValueError(f"unknown transpose impl {impl!r}")
+    if isinstance(axis, tuple):
+        raise ValueError("pairwise transpose supports single mesh axes only")
+    p = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    n_split = blk.shape[split_axis] // p
+    n_cat = blk.shape[concat_axis]
+    out_shape = list(blk.shape)
+    out_shape[split_axis] = n_split
+    out_shape[concat_axis] = n_cat * p
+    out = jnp.zeros(out_shape, blk.dtype)
+    mine = jax.lax.dynamic_slice_in_dim(blk, idx * n_split, n_split, split_axis)
+    out = jax.lax.dynamic_update_slice_in_dim(out, mine, idx * n_cat, concat_axis)
+    for s in range(1, p):
+        perm = [(i, (i + s) % p) for i in range(p)]
+        dest = (idx + s) % p
+        piece = jax.lax.dynamic_slice_in_dim(blk, dest * n_split, n_split, split_axis)
+        recv = jax.lax.ppermute(piece, axis, perm)
+        src = (idx - s) % p
+        out = jax.lax.dynamic_update_slice_in_dim(out, recv, src * n_cat, concat_axis)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTOptions:
+    """Knobs reproducing the paper's option matrix (§5.1) plus extensions.
+
+    overlap_k      CROFT's K: chunks per (FFT -> all_to_all) stage. 1 = no
+                   overlap (options 1/2); 2 = CROFT's shipped default.
+    plan_cache     True = "single plan" (options 2/4); False = re-materialize
+                   twiddles per call ("multiple plans", options 1/3).
+    local_impl     "matmul" (four-step, MXU-native) | "stockham" | "xla"
+                   | "pallas" (four-step Pallas kernel).
+    output_layout  "natural" (paper: restore the input pencil layout with two
+                   reverse transposes) | "spectral" (beyond-paper: stay in
+                   z-pencil layout, halving collective bytes).
+    transpose_impl "alltoall" | "pairwise" (FFTW3-style emulation).
+    """
+
+    overlap_k: int = 2
+    plan_cache: bool = True
+    local_impl: str = "matmul"
+    output_layout: str = "natural"
+    transpose_impl: str = "alltoall"
+
+    @classmethod
+    def paper_option(cls, opt: int, **kw) -> "FFTOptions":
+        """CROFT paper options 1-4 (§5.1)."""
+        table = {
+            1: dict(overlap_k=1, plan_cache=False),
+            2: dict(overlap_k=1, plan_cache=True),
+            3: dict(overlap_k=2, plan_cache=False),
+            4: dict(overlap_k=2, plan_cache=True),  # shipped CROFT
+        }
+        return cls(**{**table[opt], **kw})
+
+
+def _fft_along(blk: jax.Array, axis: int, sign: int, opts: FFTOptions) -> jax.Array:
+    return local_fft.fft_1d(blk, axis, sign, impl=opts.local_impl,
+                            plan_cache=opts.plan_cache)
+
+
+def _stage(blk: jax.Array, *, fft_axis: Optional[int], comm_axis: Optional[AxisName],
+           split_axis: int, concat_axis: int, chunk_axis: int, sign: int,
+           opts: FFTOptions) -> jax.Array:
+    """One pipeline stage: local FFT along ``fft_axis`` overlapped with the
+    global transpose over ``comm_axis`` (paper steps {1,2,3}, {5,6,7}).
+
+    The local block is split into K chunks along ``chunk_axis`` (an axis not
+    involved in the transpose).  Chunk i's all_to_all is independent of chunk
+    i+1's FFT — the overlap the paper implements with its second OpenMP
+    thread, here left to the XLA async-collective scheduler.
+    """
+    k = opts.overlap_k
+    if comm_axis is None:  # final stage: FFT only
+        return _fft_along(blk, fft_axis, sign, opts)
+    if k <= 1 or blk.shape[chunk_axis] % k != 0:
+        y = _fft_along(blk, fft_axis, sign, opts) if fft_axis is not None else blk
+        return _all_to_all(y, comm_axis, split_axis, concat_axis,
+                           opts.transpose_impl)
+    chunks = jnp.split(blk, k, axis=chunk_axis)
+    outs = []
+    for c in chunks:
+        y = _fft_along(c, fft_axis, sign, opts) if fft_axis is not None else c
+        outs.append(_all_to_all(y, comm_axis, split_axis, concat_axis,
+                                opts.transpose_impl))
+    return jnp.concatenate(outs, axis=chunk_axis)
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies.  Local block axis order is always (x, y, z).
+# ---------------------------------------------------------------------------
+
+def _pencil_body(blk: jax.Array, *, ax_y: AxisName, ax_z: AxisName, sign: int,
+                 opts: FFTOptions) -> jax.Array:
+    """Forward pencil pipeline, paper §4.1 steps 1-9 (+ optional restore).
+
+    in : x-pencils (Nx, Ny/Py, Nz/Pz)
+    out: natural   -> same layout;  spectral -> z-pencils (Nx/Py, Ny/Pz, Nz)
+    """
+    # steps 1-4: FFT along x, transpose x<->y in the column communicator
+    blk = _stage(blk, fft_axis=0, comm_axis=ax_y, split_axis=0, concat_axis=1,
+                 chunk_axis=2, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
+    # steps 5-8: FFT along y, transpose y<->z in the row communicator
+    blk = _stage(blk, fft_axis=1, comm_axis=ax_z, split_axis=1, concat_axis=2,
+                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny/Pz, Nz)
+    # step 9: FFT along z
+    blk = _stage(blk, fft_axis=2, comm_axis=None, split_axis=0, concat_axis=0,
+                 chunk_axis=0, sign=sign, opts=opts)
+    if opts.output_layout == "spectral":
+        return blk
+    # restore: reverse YZ then XY transposes (paper §5.2, also overlapped)
+    blk = _stage(blk, fft_axis=None, comm_axis=ax_z, split_axis=2, concat_axis=1,
+                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
+    blk = _stage(blk, fft_axis=None, comm_axis=ax_y, split_axis=1, concat_axis=0,
+                 chunk_axis=2, sign=sign, opts=opts)      # (Nx, Ny/Py, Nz/Pz)
+    return blk
+
+
+def _pencil_body_from_spectral(blk: jax.Array, *, ax_y: AxisName,
+                               ax_z: AxisName, sign: int,
+                               opts: FFTOptions) -> jax.Array:
+    """Reversed pencil pipeline: spectral (z-pencil) input -> natural output.
+
+    Used by the inverse transform when the forward ran with
+    ``output_layout='spectral'`` (beyond-paper path: the forward's two
+    restoring transposes and the inverse's two leading transposes cancel).
+    """
+    # FFT along z while z is local, then hand z back to the row communicator
+    blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=1,
+                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
+    blk = _stage(blk, fft_axis=1, comm_axis=ax_y, split_axis=1, concat_axis=0,
+                 chunk_axis=2, sign=sign, opts=opts)      # (Nx, Ny/Py, Nz/Pz)
+    blk = _stage(blk, fft_axis=0, comm_axis=None, split_axis=0, concat_axis=0,
+                 chunk_axis=0, sign=sign, opts=opts)
+    return blk
+
+
+def _slab_body_from_spectral(blk: jax.Array, *, ax_z: AxisName, sign: int,
+                             opts: FFTOptions) -> jax.Array:
+    blk = _fft_along(blk, 1, sign, opts)
+    blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=0,
+                 chunk_axis=1, sign=sign, opts=opts)       # (Nx, Ny, Nz/P)
+    blk = _fft_along(blk, 0, sign, opts)
+    return blk
+
+
+def _slab_body(blk: jax.Array, *, ax_z: AxisName, sign: int,
+               opts: FFTOptions) -> jax.Array:
+    """Slab (1-D) pipeline — the FFTW3-MPI scaling model (§2.2.1).
+
+    in: (Nx, Ny, Nz/P) -> local 2-D FFT over (x, y), one global transpose,
+    FFT along z.  P <= Nz is the scaling wall the paper's tables 1/3 show.
+    """
+    blk = _fft_along(blk, 1, sign, opts)  # y is free on both layouts
+    blk = _stage(blk, fft_axis=0, comm_axis=ax_z, split_axis=0, concat_axis=2,
+                 chunk_axis=1, sign=sign, opts=opts)       # (Nx/P, Ny, Nz)
+    blk = _fft_along(blk, 2, sign, opts)
+    if opts.output_layout == "spectral":
+        return blk                                          # z-slabs over x
+    blk = _stage(blk, fft_axis=None, comm_axis=ax_z, split_axis=2, concat_axis=0,
+                 chunk_axis=1, sign=sign, opts=opts)
+    return blk
+
+
+def _cell_body(blk: jax.Array, *, ax_x: AxisName, ax_y: AxisName,
+               ax_z: AxisName, sign: int, opts: FFTOptions) -> jax.Array:
+    """Cell (3-D) pipeline (§2.2.3): regroup to x-pencils over the folded
+    (y, x) communicator, then run the pencil pipeline.
+    """
+    fold_y = (ax_y, ax_x) if not isinstance(ax_y, tuple) else tuple(ax_y) + (ax_x,)
+    # regroup: gather x locally, splitting y further across the x axis
+    blk = _stage(blk, fft_axis=None, comm_axis=ax_x, split_axis=1, concat_axis=0,
+                 chunk_axis=2, sign=sign, opts=opts)  # (Nx, Ny/(Py*Px), Nz/Pz)
+    blk = _pencil_body(blk, ax_y=fold_y, ax_z=ax_z, sign=sign,
+                       opts=dataclasses.replace(opts, output_layout="natural"))
+    # scatter x back out to cells
+    blk = _stage(blk, fft_axis=None, comm_axis=ax_x, split_axis=0, concat_axis=1,
+                 chunk_axis=2, sign=sign, opts=opts)
+    return blk
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
+                      sign: int = -1, opts: FFTOptions = FFTOptions(),
+                      norm: Optional[str] = None) -> jax.Array:
+    """3-D FFT of a globally-sharded (..., Nx, Ny, Nz) array.
+
+    Leading batch axes are carried along unsharded (the local block sees
+    them; FFT/chunk axis indices below are offset accordingly).
+    """
+    if x.ndim != 3:
+        raise ValueError("distributed_fft3d expects a rank-3 (Nx,Ny,Nz) array; "
+                         "vmap for batches")
+    decomp.validate(x.shape, mesh, opts.overlap_k)
+
+    # A "spectral"-layout inverse consumes z-pencils and emits the natural
+    # layout (the forward's restoring transposes and the inverse's leading
+    # transposes cancel — that is the point of the optimization).
+    from_spectral = opts.output_layout == "spectral" and sign == +1
+
+    if decomp.kind == "pencil":
+        ax_y, ax_z = decomp.axes
+        fn_body = _pencil_body_from_spectral if from_spectral else _pencil_body
+        body = functools.partial(fn_body, ax_y=ax_y, ax_z=ax_z,
+                                 sign=sign, opts=opts)
+    elif decomp.kind == "slab":
+        (ax_z,) = decomp.axes
+        fn_body = _slab_body_from_spectral if from_spectral else _slab_body
+        body = functools.partial(fn_body, ax_z=ax_z, sign=sign, opts=opts)
+    else:
+        ax_x, ax_y, ax_z = decomp.axes
+        if opts.output_layout == "spectral":
+            raise ValueError("cell decomposition returns natural layout only")
+        body = functools.partial(_cell_body, ax_x=ax_x, ax_y=ax_y, ax_z=ax_z,
+                                 sign=sign, opts=opts)
+
+    if from_spectral:
+        in_spec, out_spec = decomp.spectral_spec(), decomp.partition_spec()
+    else:
+        in_spec = decomp.partition_spec()
+        out_spec = (decomp.partition_spec() if opts.output_layout == "natural"
+                    else decomp.spectral_spec())
+
+    # normalization uses *global* sizes; fold the scalar in on local blocks
+    nxyz = x.shape[-3] * x.shape[-2] * x.shape[-1]
+    if norm == "ortho":
+        scale = 1.0 / math.sqrt(nxyz)
+    elif (norm is None or norm == "backward") and sign == +1:
+        scale = 1.0 / nxyz
+    else:
+        scale = None
+
+    def wrapped(blk):
+        out = body(blk)
+        return out if scale is None else out * jnp.asarray(scale, out.dtype)
+
+    fn = shard_map(wrapped, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
+    return fn(x)
+
+
+def fft3d(x, mesh=None, decomp=None, opts: FFTOptions = FFTOptions(),
+          norm: Optional[str] = None):
+    """Forward 3-D FFT; single-device fallback when no mesh is given."""
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return local_fft.fft3d_local(x, -1, impl=opts.local_impl,
+                                     plan_cache=opts.plan_cache, norm=norm)
+    return distributed_fft3d(x, mesh, decomp, -1, opts, norm)
+
+
+def ifft3d(x, mesh=None, decomp=None, opts: FFTOptions = FFTOptions(),
+           norm: Optional[str] = "backward"):
+    """Inverse 3-D FFT (paper eq. 2: 1/(NxNyNz) normalization)."""
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return local_fft.fft3d_local(x, +1, impl=opts.local_impl,
+                                     plan_cache=opts.plan_cache, norm=norm)
+    return distributed_fft3d(x, mesh, decomp, +1, opts, norm)

@@ -1,0 +1,152 @@
+"""Local (single-device) 1-D FFT building blocks.
+
+CROFT calls FFTW's 1-D routine along each axis; on TPU the idiomatic
+equivalent is the four-step (Bailey) factorization applied as MXU matmuls
+(see DESIGN.md §2).  Three interchangeable implementations:
+
+- ``fft_matmul``   four-step via einsum (lowers everywhere; what the
+                   distributed transform uses by default, and the oracle the
+                   Pallas kernel is checked against)
+- ``fft_stockham`` radix-2 decimation-in-time, vectorized (VPU-style)
+- ``fft_xla``      ``jnp.fft.fft`` (XLA's FFT HLO; reference)
+
+All operate along the *last* axis; callers move axes.  Forward sign=-1,
+inverse sign=+1 unnormalized (normalization applied at the 3-D level, eq. (2)
+of the paper).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_lib
+
+
+def fft_xla(x: jax.Array, sign: int = -1) -> jax.Array:
+    return jnp.fft.fft(x) if sign == -1 else jnp.fft.ifft(x) * x.shape[-1]
+
+
+def _apply_dft_matrix(x: jax.Array, w: jax.Array) -> jax.Array:
+    # x (..., n), w (n, k): complex matmul on the MXU (XLA decomposes to
+    # real dots); contraction over the last axis.
+    return jnp.einsum("...n,nk->...k", x, w, precision=jax.lax.Precision.HIGHEST)
+
+
+def fft_matmul(x: jax.Array, sign: int = -1, *, plan_cache: bool = True,
+               max_radix: int = plan_lib.MAX_RADIX) -> jax.Array:
+    """Four-step FFT along the last axis.  Supports any power-of-two size.
+
+    n <= max_radix           : single DFT matmul
+    n <= max_radix**2        : reshape (n1, n2); DFT(n1) matmul; twiddle;
+                               DFT(n2) matmul; transpose  (the Pallas kernel
+                               implements exactly this path)
+    larger                   : six-step recursion on the n2 axis
+    """
+    n = x.shape[-1]
+    plan = plan_lib.make_plan(n, sign, str(x.dtype), max_radix)
+    w1, w2, tw = plan.constants_jnp(rematerialize=not plan_cache)
+    if plan.n2 == 1:
+        return _apply_dft_matrix(x, w1)
+
+    batch = x.shape[:-1]
+    n1, n2 = plan.n1, plan.n2
+    # n = n2*j1 + j2  (row-major reshape)
+    xr = x.reshape(batch + (n1, n2))
+    # stage 1: DFT over j1 -> (..., n2, k1)
+    y = jnp.einsum("...jt,jk->...tk", xr, w1,
+                   precision=jax.lax.Precision.HIGHEST)
+    # stage 2: twiddles T[j2, k1]
+    y = y * tw
+    if n2 <= max_radix:
+        # stage 3: DFT over j2 -> (..., k1, k2): contract the t axis
+        z = jnp.einsum("...tk,ts->...ks", y, w2,
+                       precision=jax.lax.Precision.HIGHEST)
+    else:
+        # six-step: recurse along the n2 axis (currently axis -2); move it
+        # last, recurse, move back
+        y = jnp.swapaxes(y, -1, -2)  # (..., k1, n2)
+        z = fft_matmul(y, sign, plan_cache=plan_cache, max_radix=max_radix)
+        # z[..., k1, k2] already
+    # output index k = k1 + n1*k2  -> lay out (..., k2, k1) then ravel
+    z = jnp.swapaxes(z, -1, -2)
+    return z.reshape(batch + (n,))
+
+
+def fft_stockham(x: jax.Array, sign: int = -1, *, plan_cache: bool = True) -> jax.Array:
+    """Radix-2 DIT FFT along the last axis (power-of-two sizes).
+
+    Vectorized butterflies; the per-stage twiddles are plan constants.  This
+    is the "CPU-shaped" algorithm kept for contrast with the matmul path.
+    """
+    n = x.shape[-1]
+    if not plan_lib._is_pow2(n):
+        raise ValueError(f"power-of-two sizes only, got {n}")
+    stages = int(math.log2(n))
+    # bit-reversal permutation as a static gather
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int32)
+    for b in range(stages):
+        rev |= ((idx >> b) & 1) << (stages - 1 - b)
+    y = x[..., rev]
+    for s in range(stages):
+        m = 1 << (s + 1)  # butterfly span
+        half = m // 2
+        if plan_cache:
+            tw_np = np.exp(sign * 2j * np.pi * np.arange(half) / m).astype(
+                np.dtype(str(x.dtype)))
+            tw = jnp.asarray(tw_np)
+        else:
+            k = jnp.arange(half, dtype=jnp.float32)
+            ang = (sign * 2.0 * jnp.pi / m) * k
+            tw = jax.lax.complex(jnp.cos(ang), jnp.sin(ang)).astype(x.dtype)
+        yr = y.reshape(y.shape[:-1] + (n // m, m))
+        even, odd = yr[..., :half], yr[..., half:]
+        t = odd * tw
+        y = jnp.concatenate([even + t, even - t], axis=-1).reshape(y.shape)
+    return y
+
+
+_IMPLS = {"matmul": fft_matmul, "stockham": fft_stockham, "xla": fft_xla}
+
+
+def fft_1d(x: jax.Array, axis: int, sign: int = -1, *, impl: str = "matmul",
+           plan_cache: bool = True) -> jax.Array:
+    """1-D FFT along ``axis`` with the chosen implementation."""
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: optional dep path
+        fn = lambda v: kernel_ops.fft_matmul_1d(v, sign=sign)
+    elif impl == "xla":
+        fn = lambda v: fft_xla(v, sign)
+    else:
+        base = _IMPLS[impl]
+        fn = lambda v: base(v, sign, plan_cache=plan_cache)
+    x = jnp.moveaxis(x, axis, -1)
+    y = fn(x)
+    return jnp.moveaxis(y, -1, axis)
+
+
+def fft3d_local(x: jax.Array, sign: int = -1, *, impl: str = "matmul",
+                plan_cache: bool = True, norm: Optional[str] = None) -> jax.Array:
+    """Single-device 3-D FFT over the last three axes (x, y, z order)."""
+    assert x.ndim >= 3
+    for ax in (-3, -2, -1):
+        x = fft_1d(x, ax, sign, impl=impl, plan_cache=plan_cache)
+    return apply_norm(x, sign, norm)
+
+
+def apply_norm(x: jax.Array, sign: int, norm: Optional[str]) -> jax.Array:
+    """Paper convention (eq. 2): forward unnormalized, inverse 1/(NxNyNz)."""
+    nxyz = x.shape[-3] * x.shape[-2] * x.shape[-1]
+    if norm is None or norm == "backward":
+        return x / nxyz if sign == +1 else x
+    if norm == "ortho":
+        return x / jnp.sqrt(jnp.asarray(nxyz, x.dtype))
+    if norm == "none":
+        return x
+    raise ValueError(f"unknown norm {norm!r}")

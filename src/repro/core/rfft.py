@@ -1,0 +1,67 @@
+"""Real-to-complex / complex-to-real 3-D transforms.
+
+The paper lists r2c/c2r as future work (§8); we implement them on top of the
+c2c pipeline.  The distributed path is the straightforward embedding (cast,
+c2c, keep the non-redundant half of the last axis); the packed two-for-one
+real trick is a documented follow-on optimization (DESIGN.md §2) — the
+embedding is bandwidth-suboptimal by 2x on the first stage but exactly
+matches ``numpy.fft.rfftn`` semantics, which is what the verification needs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed, local_fft
+from repro.core.decomposition import Decomposition
+from repro.core.distributed import FFTOptions
+
+
+def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
+           opts: FFTOptions = FFTOptions()) -> jax.Array:
+    """Real input (Nx, Ny, Nz) -> complex (Nx, Ny, Nz//2 + 1).
+
+    Matches ``jnp.fft.rfftn`` with axes in (x, y, z) order (z contiguous,
+    halved — the axis that stays local at the end of the pencil pipeline, so
+    the truncation never crosses a shard boundary in spectral layout).
+    """
+    if jnp.iscomplexobj(x):
+        raise ValueError("rfft3d expects a real array")
+    nz = x.shape[-1]
+    xc = x.astype(jnp.complex64 if x.dtype != jnp.float64 else jnp.complex128)
+    y = distributed.fft3d(xc, mesh, decomp, opts)
+    # non-redundant half along z; in natural layout z is sharded, so slice
+    # globally (XLA turns this into a shard-local slice when divisible)
+    return y[..., : nz // 2 + 1]
+
+
+def _negate_freq(a: jax.Array, axis: int) -> jax.Array:
+    """Index map k -> (-k) mod N along ``axis``: [0, N-1, N-2, ..., 1]."""
+    return jnp.roll(jnp.flip(a, axis), 1, axis)
+
+
+def irfft3d(y: jax.Array, nz: int, mesh=None,
+            decomp: Optional[Decomposition] = None,
+            opts: FFTOptions = FFTOptions()) -> jax.Array:
+    """Inverse of :func:`rfft3d`; reconstructs the Hermitian half.
+
+    F[kx, ky, kz] = conj(F[-kx mod Nx, -ky mod Ny, nz - kz]) for the
+    missing bins kz in [nz//2 + 1, nz - 1].
+    """
+    body = y[..., 1: (nz + 1) // 2]           # kz' = 1 .. ceil(nz/2)-1
+    tail = jnp.conj(body)
+    tail = _negate_freq(tail, -3)             # -kx mod Nx
+    tail = _negate_freq(tail, -2)             # -ky mod Ny
+    tail = jnp.flip(tail, -1)                 # ascending kz = nz-kz' order
+    full = jnp.concatenate([y, tail], axis=-1)
+    assert full.shape[-1] == nz, (full.shape, nz)
+    x = distributed.ifft3d(full, mesh, decomp, opts)
+    return jnp.real(x)
+
+
+def rfft3d_local(x: jax.Array) -> jax.Array:
+    """Single-device r2c via the plan-based local transform (z-axis halved)."""
+    return rfft3d(x, mesh=None)

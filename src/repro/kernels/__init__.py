@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the FFT hot spots (validated in interpret mode).
+
+fft_matmul      four-step (Bailey) batched 1-D FFT on the MXU
+spectral_scale  fused frequency-domain complex multiply-scale
+ops             jit'd complex-in/complex-out wrappers
+ref             pure-jnp oracles for the test sweeps
+"""
+
+from repro.kernels.ops import fft_matmul_1d, spectral_scale_op
+
+__all__ = ["fft_matmul_1d", "spectral_scale_op"]

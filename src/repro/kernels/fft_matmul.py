@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: batched 1-D FFT via the four-step (Bailey) matmul
+factorization — the MXU-native replacement for FFTW's butterfly kernels
+(DESIGN.md §2, hardware adaptation).
+
+Layout decisions:
+  * complex data travels as separate float32 real/imag planes (TPU Pallas has
+    no complex registers);
+  * each DFT stage is ONE real matmul against a stacked-real matrix
+      [xr xi] @ [[Wr, Wi], [-Wi, Wr]] = [Re(xW), Im(xW)]
+    so with the default radix 64 the stage-1 operand is (rows, 128) @
+    (128, 128) — exactly an MXU tile;
+  * the batch dimension is tiled into VMEM blocks via BlockSpec; DFT
+    matrices/twiddles are small (<=128x128 f32) and loaded whole per block.
+
+VMEM budget per block (N = n1*n2 points, Bb batch rows):
+  2 input planes + 2 output planes + ~4 intermediates ~= 8 * Bb * N * 4 bytes;
+  Bb is chosen in ops.py so this stays under ~4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import plan as plan_lib
+
+
+def _complex_mul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _fft4step_kernel(xr_ref, xi_ref, w1_ref, w2_ref, twr_ref, twi_ref,
+                     or_ref, oi_ref, *, n1: int, n2: int):
+    """One batch block: (Bb, N) real/imag planes -> transformed planes."""
+    bb = xr_ref.shape[0]
+    n = n1 * n2
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+
+    if n2 == 1:
+        # single-matmul DFT: (Bb, 2N) @ (2N, 2N)
+        xs = jnp.concatenate([xr, xi], axis=1)
+        ys = jnp.dot(xs, w1_ref[...], preferred_element_type=jnp.float32)
+        or_ref[...] = ys[:, :n]
+        oi_ref[...] = ys[:, n:]
+        return
+
+    # stage 1: DFT over j1.  x[b, j1*n2 + j2] -> rows (b, j2), cols j1
+    xr3 = xr.reshape(bb, n1, n2).transpose(0, 2, 1).reshape(bb * n2, n1)
+    xi3 = xi.reshape(bb, n1, n2).transpose(0, 2, 1).reshape(bb * n2, n1)
+    xs = jnp.concatenate([xr3, xi3], axis=1)              # (Bb*n2, 2*n1)
+    ys = jnp.dot(xs, w1_ref[...], preferred_element_type=jnp.float32)
+    yr = ys[:, :n1].reshape(bb, n2, n1)                   # [b, j2, k1]
+    yi = ys[:, n1:].reshape(bb, n2, n1)
+
+    # stage 2: twiddles T[j2, k1] = exp(sign*2πi*k1*j2/N)
+    zr, zi = _complex_mul(yr, yi, twr_ref[...], twi_ref[...])
+
+    # stage 3: DFT over j2.  rows (b, k1), cols j2
+    zr2 = zr.transpose(0, 2, 1).reshape(bb * n1, n2)
+    zi2 = zi.transpose(0, 2, 1).reshape(bb * n1, n2)
+    zs = jnp.concatenate([zr2, zi2], axis=1)              # (Bb*n1, 2*n2)
+    ws = jnp.dot(zs, w2_ref[...], preferred_element_type=jnp.float32)
+    wr = ws[:, :n2].reshape(bb, n1, n2)                   # [b, k1, k2]
+    wi = ws[:, n2:].reshape(bb, n1, n2)
+
+    # output index k = k1 + n1*k2  ->  lay out (b, k2, k1), ravel
+    or_ref[...] = wr.transpose(0, 2, 1).reshape(bb, n)
+    oi_ref[...] = wi.transpose(0, 2, 1).reshape(bb, n)
+
+
+def fft4step_planes(xr: jax.Array, xi: jax.Array, sign: int = -1, *,
+                    block_rows: int = 0, interpret: bool = True) -> tuple:
+    """Batched FFT over float32 planes of shape (B, N); N = n1*n2 pow-2,
+    N <= MAX_TWO_LEVEL.  Returns (yr, yi).
+    """
+    b, n = xr.shape
+    plan = plan_lib.make_plan(n, sign, "complex64")
+    if plan.n2 > plan_lib.MAX_RADIX:
+        raise ValueError(
+            f"N={n} exceeds the two-level kernel limit "
+            f"{plan_lib.MAX_TWO_LEVEL}; use the jnp six-step path")
+    n1, n2 = plan.n1, plan.n2
+
+    if block_rows <= 0:
+        # keep ~8 live (Bb, N) f32 planes under ~4 MiB of VMEM
+        block_rows = max(1, min(b, (4 * 1024 * 1024) // (8 * n * 4)))
+        while b % block_rows:
+            block_rows -= 1
+    grid = (b // block_rows,)
+
+    w1 = jnp.asarray(plan.w1_stacked)                     # (2n1, 2n1)
+    if n2 == 1:
+        w2 = jnp.zeros((2, 2), jnp.float32)               # placeholder
+        twr = jnp.zeros((1, 1), jnp.float32)
+        twi = jnp.zeros((1, 1), jnp.float32)
+    else:
+        w2 = jnp.asarray(plan.w2_stacked)                 # (2n2, 2n2)
+        twr = jnp.asarray(plan.tw.real.astype(jnp.float32))   # (n2, n1)
+        twi = jnp.asarray(plan.tw.imag.astype(jnp.float32))
+
+    const = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    kernel = functools.partial(_fft4step_kernel, n1=n1, n2=n2)
+    yr, yi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            const(w1.shape), const(w2.shape),
+            const(twr.shape), const(twi.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, xi, w1, w2, twr, twi)
+    return yr, yi

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function has the same signature as the corresponding wrapper
+in ``ops.py`` and is the ground truth the kernel sweeps assert against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_fft_1d(x: jax.Array, sign: int = -1) -> jax.Array:
+    """Batched 1-D DFT along the last axis (complex in, complex out)."""
+    return jnp.fft.fft(x) if sign == -1 else jnp.fft.fft(jnp.conj(x)).conj()
+
+
+def ref_fft_1d_naive(x: np.ndarray, sign: int = -1) -> np.ndarray:
+    """O(N^2) direct DFT — the independent oracle (never touches any FFT)."""
+    n = x.shape[-1]
+    w = np.exp(sign * 2j * np.pi * np.outer(np.arange(n), np.arange(n)) / n)
+    return np.einsum("...n,nk->...k", x, w)
+
+
+def ref_spectral_scale(x: jax.Array, h: jax.Array,
+                       alpha: float = 1.0) -> jax.Array:
+    """y = alpha * x * h with h broadcast over leading batch dims."""
+    return (alpha * x) * h
+
+
+def ref_stockham(x: jax.Array, sign: int = -1) -> jax.Array:
+    return ref_fft_1d(x, sign)
+
+
+def ref_flash_attention(q, k, v, causal=True, window=None, scale=None):
+    """Oracle for the flash-attention kernel (GQA, causal/windowed)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, dv = v.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    k_rep = jnp.repeat(k, g, axis=2)
+    v_rep = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k_rep.astype(jnp.float32))
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (qi - ki < window)
+    s = jnp.where(mask[None, None], s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v_rep.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Pallas kernel: fused complex pointwise multiply-scale in frequency space.
+
+y = alpha * x * h  — the inner op of spectral solvers (Poisson multiplier,
+convolution filters) and of the 3-D inverse normalization.  Fusing the
+complex product with the scalar keeps the frequency-domain round trip at one
+HBM read + one write per plane instead of four.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(xr_ref, xi_ref, hr_ref, hi_ref, or_ref, oi_ref, *,
+                  alpha: float):
+    xr = xr_ref[...] * alpha
+    xi = xi_ref[...] * alpha
+    hr = hr_ref[...]
+    hi = hi_ref[...]
+    or_ref[...] = xr * hr - xi * hi
+    oi_ref[...] = xr * hi + xi * hr
+
+
+def spectral_scale_planes(xr, xi, hr, hi, alpha: float = 1.0, *,
+                          block_rows: int = 0, interpret: bool = True):
+    """(B, N) f32 planes times (N,)-broadcast filter planes."""
+    b, n = xr.shape
+    if block_rows <= 0:
+        block_rows = max(1, min(b, (4 * 1024 * 1024) // (6 * n * 4)))
+        while b % block_rows:
+            block_rows -= 1
+    grid = (b // block_rows,)
+    hr2 = hr.reshape(1, n)
+    hi2 = hi.reshape(1, n)
+    kernel = functools.partial(_scale_kernel, alpha=alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, xi, hr2, hi2)

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; ``dryrun.py`` sets the 512-placeholder-device
+XLA flag before calling it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 0):
+    """Best-effort mesh from whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    if model <= 0:
+        model = 1
+        for cand in (2, 4, 8, 16):
+            if n % cand == 0 and cand <= n:
+                model = cand
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def fft_mesh_axes(mesh) -> tuple:
+    """Pencil (Py, Pz) communicator axes on a production mesh: the pod axis
+    folds into the Y communicator (DESIGN.md §2)."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return (("pod", "data"), "model")
+    return ("data", "model")

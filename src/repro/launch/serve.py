@@ -1,0 +1,92 @@
+"""Serving driver: batched prefill + decode loop.
+
+``python -m repro.launch.serve --arch rwkv6-3b --smoke --prompt-len 32
+--gen-len 32 --batch 4``
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_caches
+from repro.train import make_serve_steps
+from repro.train.data import synth_tokens
+from repro.train.train_step import temperature_sample
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-block", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    mesh = make_local_mesh()
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    max_len = args.prompt_len + args.gen_len \
+        + (cfg.n_frontend_tokens if cfg.prefix_lm else 0)
+    prefill_fn, decode_fn = make_serve_steps(
+        cfg, mesh, args.batch, max_len, kv_block=args.kv_block)
+
+    prompts = synth_tokens(args.seed, 0, args.batch, args.prompt_len,
+                           cfg.vocab)
+    enc_len = cfg.n_frontend_tokens if cfg.encoder is not None else 0
+    caches = init_caches(cfg, args.batch, max_len, enc_len=enc_len,
+                         dtype=jnp.bfloat16)
+    kwargs = {}
+    rng = np.random.default_rng(args.seed)
+    if cfg.encoder is not None:
+        kwargs["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model), np.float32))
+    elif cfg.frontend == "vision":
+        kwargs["prefix_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model), np.float32))
+
+    with jax.set_mesh(mesh):
+        t0 = time.monotonic()
+        logits, caches = prefill_fn(params, jnp.asarray(prompts), caches,
+                                    **kwargs)
+        logits.block_until_ready()
+        t_prefill = time.monotonic() - t0
+        key = jax.random.PRNGKey(args.seed)
+        tok = temperature_sample(key, logits, args.temperature)[:, None]
+        out = [tok]
+        prefix = cfg.n_frontend_tokens if cfg.prefix_lm else 0
+        t0 = time.monotonic()
+        for i in range(args.gen_len - 1):
+            t = prefix + args.prompt_len + i
+            logits, caches = decode_fn(params, tok, caches, t)
+            key, sub = jax.random.split(key)
+            tok = temperature_sample(sub, logits, args.temperature)[:, None]
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        t_decode = time.monotonic() - t0
+
+    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+    tps = args.batch * (args.gen_len - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {t_prefill:.3f}s for {args.batch}x{args.prompt_len} tok")
+    print(f"decode : {t_decode:.3f}s for {args.gen_len-1} steps "
+          f"({tps:.1f} tok/s)")
+    print(f"sample generations (first 16 ids):\n{gen[:, :16]}")
+
+
+if __name__ == "__main__":
+    main()

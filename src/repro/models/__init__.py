@@ -1,0 +1,12 @@
+"""LM substrate: configs, layers, and the staged scan model."""
+
+from repro.models.config import (AttentionSpec, EncoderConfig, LayerSpec,
+                                 ModelConfig, MoESpec, RecurrentSpec, Stage,
+                                 pattern_stack, simple_stack)
+from repro.models.model import (encode, forward, init_caches, init_params)
+
+__all__ = [
+    "AttentionSpec", "EncoderConfig", "LayerSpec", "ModelConfig", "MoESpec",
+    "RecurrentSpec", "Stage", "encode", "forward", "init_caches",
+    "init_params", "pattern_stack", "simple_stack",
+]

@@ -1,0 +1,284 @@
+"""Attention family: GQA/MQA, sliding-window, local:global, prefix-LM,
+cross-attention, and DeepSeek-style MLA — one blockwise online-softmax core.
+
+Distribution contract (DESIGN.md §4): under GSPMD the query sequence axis is
+sharded over the ``model`` mesh axis (context parallelism) while K/V are
+constrained replicated along it (cheap: GQA KV is small).  Head counts
+therefore never need to divide the mesh.  At decode time the KV *cache*
+stays sequence-sharded; the softmax/contract reductions over the sharded
+axis lower to partial-reduce collectives — GSPMD-native flash-decoding.
+
+Masks are evaluated from explicit global position vectors, so full caches,
+ring (sliding-window) caches and offset decode queries all share one code
+path: empty cache slots carry position -1 and mask themselves out.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import AttentionSpec
+from repro.models.layers import apply_rope, rope_angles, truncated_normal
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+class MaskSpec(NamedTuple):
+    causal: bool = True
+    window: Optional[int] = None     # sliding window (tokens back)
+    prefix_len: int = 0              # prefix-LM: bidirectional first P tokens
+
+
+def _mask_block(ms: MaskSpec, q_pos: jax.Array, k_pos: jax.Array):
+    """(Sq, Sk) boolean mask from global positions (k_pos < 0 = empty)."""
+    qi = q_pos[:, None]
+    ki = k_pos[None, :]
+    ok = ki >= 0
+    if ms.causal:
+        allowed = ki <= qi
+        if ms.prefix_len:
+            allowed = allowed | (ki < ms.prefix_len)
+        ok = ok & allowed
+    if ms.window is not None:
+        ok = ok & (qi - ki < ms.window)
+    return ok
+
+
+def init_gqa(key, d: int, a: AttentionSpec):
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    std_o = (a.n_heads * a.head_dim) ** -0.5
+    return {
+        "wq": truncated_normal(ks[0], (d, a.n_heads, a.head_dim), std),
+        "wk": truncated_normal(ks[1], (d, a.n_kv_heads, a.head_dim), std),
+        "wv": truncated_normal(ks[2], (d, a.n_kv_heads, a.head_dim), std),
+        "wo": truncated_normal(ks[3], (a.n_heads, a.head_dim, d), std_o),
+    }
+
+
+def init_mla(key, d: int, a: AttentionSpec):
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    qd = a.qk_nope_dim + a.qk_rope_dim
+    p = {
+        "w_dkv": truncated_normal(ks[0], (d, a.kv_lora_rank + a.qk_rope_dim), std),
+        "w_uk": truncated_normal(ks[1], (a.kv_lora_rank, a.n_heads, a.qk_nope_dim),
+                                 a.kv_lora_rank ** -0.5),
+        "w_uv": truncated_normal(ks[2], (a.kv_lora_rank, a.n_heads, a.v_head_dim),
+                                 a.kv_lora_rank ** -0.5),
+        "wo": truncated_normal(ks[3], (a.n_heads, a.v_head_dim, d),
+                               (a.n_heads * a.v_head_dim) ** -0.5),
+    }
+    if a.q_lora_rank:
+        p["w_dq"] = truncated_normal(ks[4], (d, a.q_lora_rank), std)
+        p["w_uq"] = truncated_normal(ks[5], (a.q_lora_rank, a.n_heads, qd),
+                                     a.q_lora_rank ** -0.5)
+    else:
+        p["wq"] = truncated_normal(ks[6], (d, a.n_heads, qd), std)
+    return p
+
+
+def init_attention(key, d: int, a: AttentionSpec):
+    return init_mla(key, d, a) if a.kind == "mla" else init_gqa(key, d, a)
+
+
+# --------------------------------------------------------------------------
+# blockwise online-softmax core
+# --------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, ms: MaskSpec, q_pos, k_pos, *,
+                        kv_block: int = 1024, remat_step: bool = True):
+    """q (B,Sq,H,hd) · k,v (B,Sk,KV,hd) -> (B,Sq,H,hd_v).
+
+    Online softmax over kv blocks (flash pattern at the XLA level; peak
+    score memory O(Sq * kv_block)).  GQA grouping by reshaping q to
+    (…, KV, G, hd).  ``q_pos`` (Sq,) / ``k_pos`` (Sk,) are global indices.
+
+    ``remat_step``: checkpoint each kv-block step so the scan's backward
+    recomputes the (Sq x blk) probabilities instead of stacking them as
+    f32 residuals — the flash-backward memory trade (§Perf).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv_heads, hd_v = v.shape
+    g = h // kv_heads
+    qg = q.reshape(b, sq, kv_heads, g, hd)
+    blk = min(kv_block, sk)
+    while sk % blk:            # largest divisor of sk not exceeding kv_block
+        blk -= 1
+    nblk = sk // blk
+
+    kb = jnp.moveaxis(k.reshape(b, nblk, blk, kv_heads, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, blk, kv_heads, hd_v), 1, 0)
+    kpb = k_pos.reshape(nblk, blk)
+
+    def step(carry, blk_in):
+        m_prev, l_prev, acc = carry
+        kj, vj, kp = blk_in
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kj,
+                       preferred_element_type=jnp.float32)
+        mask = _mask_block(ms, q_pos, kp)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        scale_prev = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale_prev + jnp.sum(p, axis=-1)
+        acc = acc * scale_prev[..., None] \
+            + jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vj.dtype), vj,
+                         preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, sq, kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv_heads, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv_heads, g, hd_v), jnp.float32)
+    if nblk == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (kb[0], vb[0], kpb[0]))
+    else:
+        step_fn = jax.checkpoint(step) if remat_step else step
+        (m, l, acc), _ = jax.lax.scan(step_fn, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd_v)
+
+
+# --------------------------------------------------------------------------
+# layer forwards.  Contract:
+#   attention_fwd(params, x, a, ms, q_pos, kv=None, k_pos=None, ...)
+#     -> (y, new_kv)
+#   kv is None        : self-attention over x (train / prefill);
+#                       new_kv = this segment's (k, v) (or MLA latent)
+#   kv = (k_buf,v_buf): attend over the provided buffers (decode cache with
+#                       the current token already written, or cross-attn
+#                       memory); new_kv echoes them back
+# --------------------------------------------------------------------------
+
+def gqa_project_kv(params, x, a: AttentionSpec, positions):
+    """Project (and rope) this segment's k/v — used to fill decode caches."""
+    dt = x.dtype
+    k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"].astype(dt))
+    if a.use_rope:
+        cos, sin = rope_angles(positions, a.head_dim, a.rope_theta)
+        k = apply_rope(k, cos, sin)
+    return k, v
+
+
+def gqa_fwd(params, x, a: AttentionSpec, ms: MaskSpec, q_pos, kv=None,
+            k_pos=None, *, kv_block: int = 1024, kv_spec=None,
+            kv_local_spec=None):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if a.use_rope:
+        cos, sin = rope_angles(q_pos, a.head_dim, a.rope_theta)
+        q = apply_rope(q, cos, sin)
+    if kv is None:
+        k, v = gqa_project_kv(params, x, a, q_pos)
+        k_pos = q_pos
+        if kv_spec is not None and kv_local_spec is not None:
+            # pin the projection output to the sequence-sharded layout so
+            # GSPMD projects from LOCAL x; without this it gathers the
+            # (B,S,D) activations before the einsum — 36x more bytes than
+            # gathering the GQA-narrow K/V after it (§Perf, yi-34b)
+            k = jax.lax.with_sharding_constraint(k, kv_local_spec)
+            v = jax.lax.with_sharding_constraint(v, kv_local_spec)
+    else:
+        k, v = kv
+    if kv_spec is not None:
+        # gather K/V along the context-parallel axis (queries stay sharded)
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    scale = a.scale or a.head_dim ** -0.5
+    o = blockwise_attention(q * scale, k, v, ms, q_pos, k_pos,
+                            kv_block=kv_block)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
+    return y, (k, v)
+
+
+def mla_project_latent(params, x, a: AttentionSpec):
+    """Joint latent [c_kv | k_rope_unrotated] — the cached quantity."""
+    return x @ params["w_dkv"].astype(x.dtype)
+
+
+def mla_fwd(params, x, a: AttentionSpec, ms: MaskSpec, q_pos, kv=None,
+            k_pos=None, *, kv_block: int = 1024, kv_spec=None,
+            kv_local_spec=None, absorbed=None):
+    """DeepSeek-V2 MLA.  Cache = joint latent (B, S, kv_lora+rope);
+    k_rope rotation is applied at read time from absolute k positions, so
+    the cached latent is position-free.
+
+    ``absorbed=True`` (default, §Perf): W_uk/W_uv are absorbed into the
+    query/output sides, turning attention into **MQA over the latent** —
+    K = [c_kv | k_rope] (one 576-wide kv head), V = c_kv.  No per-token
+    decompression: the context-parallel KV gather carries 75 MB instead of
+    the 10.7 GB of materialized 128-head K/V per layer (the memory cliff of
+    the baseline deepseek-v2 train_4k cell).  ``absorbed=False`` keeps the
+    paper-literal decompression path (tests assert both agree).
+    """
+    dt = x.dtype
+    if absorbed is None:
+        absorbed = {"always": True, "never": False,
+                    "decode": x.shape[1] == 1}[a.mla_absorb]
+    qd = a.qk_nope_dim + a.qk_rope_dim
+    if a.q_lora_rank:
+        cq = x @ params["w_dq"].astype(dt)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., : a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    cos_q, sin_q = rope_angles(q_pos, a.qk_rope_dim, a.rope_theta)
+    q_rope = apply_rope(q_rope, cos_q, sin_q)
+
+    if kv is None:
+        latent = mla_project_latent(params, x, a)
+        k_pos = q_pos
+        if kv_spec is not None and kv_local_spec is not None:
+            latent = jax.lax.with_sharding_constraint(
+                latent,
+                jax.sharding.PartitionSpec(*kv_local_spec[:2], None))
+    else:
+        latent = kv
+    if kv_spec is not None:
+        latent = jax.lax.with_sharding_constraint(
+            latent, jax.sharding.PartitionSpec(*kv_spec[:1], None, None))
+    c_kv = latent[..., : a.kv_lora_rank]
+    k_rope = latent[..., a.kv_lora_rank:]
+    cos_k, sin_k = rope_angles(k_pos, a.qk_rope_dim, a.rope_theta)
+    # rope at stored absolute positions; invalid (-1) rows are masked later
+    k_rope = apply_rope(k_rope[..., None, :], cos_k, sin_k)  # (B,T,1,rope)
+    scale = a.scale or qd ** -0.5
+
+    if absorbed:
+        # q_lat[h] = q_nope[h] @ W_uk[:,h,:]^T  — score side absorption
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope,
+                           params["w_uk"].astype(dt))
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,S,H,R+rope)
+        k_full = jnp.concatenate([c_kv[..., None, :], k_rope], axis=-1)
+        v_lat = c_kv[..., None, :]                          # (B,T,1,R)
+        o_lat = blockwise_attention(q_full * scale, k_full, v_lat, ms,
+                                    q_pos, k_pos, kv_block=kv_block)
+        # output side absorption: o[h] = o_lat[h] @ W_uv[:,h,:]
+        o = jnp.einsum("bshr,rhv->bshv", o_lat.astype(dt),
+                       params["w_uv"].astype(dt))
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (a.qk_rope_dim,))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = blockwise_attention(q_full * scale, k, v, ms, q_pos, k_pos,
+                                kv_block=kv_block)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
+    return y, latent
+
+
+def attention_fwd(params, x, a: AttentionSpec, ms: MaskSpec, q_pos, kv=None,
+                  k_pos=None, *, kv_block: int = 1024, kv_spec=None,
+                  kv_local_spec=None):
+    fn = mla_fwd if a.kind == "mla" else gqa_fwd
+    return fn(params, x, a, ms, q_pos, kv, k_pos, kv_block=kv_block,
+              kv_spec=kv_spec, kv_local_spec=kv_local_spec)

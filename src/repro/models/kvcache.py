@@ -1,0 +1,135 @@
+"""KV-cache structures: full, ring (sliding-window), MLA-latent, recurrent.
+
+All caches carry an explicit per-slot global-position vector ``pos``
+(-1 = empty); attention masks are evaluated from it, so full and ring
+caches share the attention code path.  ``pos`` is batch-agnostic (the serve
+loop decodes in lock-step).
+
+Layout contract (DESIGN.md §4): the slot axis is sharded over the ``model``
+mesh axis at serve time; batch over ``data``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import AttentionSpec, LayerSpec, RecurrentSpec
+
+
+def init_attn_cache(spec: AttentionSpec, batch: int, max_len: int, dtype):
+    """Allocate an empty attention cache for one layer."""
+    n_slots = min(max_len, spec.window) if spec.window else max_len
+    if spec.kind == "mla":
+        width = spec.kv_lora_rank + spec.qk_rope_dim
+        return {
+            "latent": jnp.zeros((batch, n_slots, width), dtype),
+            "pos": jnp.full((n_slots,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, n_slots, spec.n_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, n_slots, spec.n_kv_heads, spec.head_dim), dtype),
+        "pos": jnp.full((n_slots,), -1, jnp.int32),
+    }
+
+
+def init_recurrent_cache(spec: RecurrentSpec, d_model: int, batch: int, dtype):
+    if spec.kind == "rglru":
+        ds = spec.d_state or d_model
+        return {
+            "h": jnp.zeros((batch, ds), jnp.float32),
+            "conv": jnp.zeros((batch, spec.conv_width - 1, ds), dtype),
+            "x_prev_ffn": jnp.zeros((batch, d_model), dtype),
+        }
+    n_heads = spec.n_heads or d_model // 64
+    dk = d_model // n_heads
+    return {
+        "s": jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+        "x_prev": jnp.zeros((batch, d_model), dtype),
+        "x_prev_ffn": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def init_layer_cache(spec: LayerSpec, d_model: int, batch: int, max_len: int,
+                     enc_len: int, enc_kv_heads: int, dtype):
+    cache = {}
+    if spec.mixer == "attn":
+        cache["self"] = init_attn_cache(spec.attn, batch, max_len, dtype)
+    elif spec.mixer in ("rglru", "rwkv6"):
+        cache["rec"] = init_recurrent_cache(spec.recurrent, d_model, batch, dtype)
+    if spec.ffn == "rwkv_cm":
+        cache.setdefault("rec", {})  # x_prev_ffn lives with the rec cache
+    if spec.cross_attn:
+        a = spec.attn
+        cache["cross"] = {
+            "k": jnp.zeros((batch, enc_len, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((batch, enc_len, a.n_kv_heads, a.head_dim), dtype),
+            "pos": jnp.arange(enc_len, dtype=jnp.int32),
+        }
+    return cache
+
+
+def write_attn_cache(cache: dict, k_new, v_new, start: jax.Array):
+    """Insert a segment of S_new tokens at global positions
+    [start, start+S_new) (S_new static; start may be traced).
+
+    Full cache: slots == positions.  Ring cache of W slots: slot = pos % W;
+    for segments longer than W only the last W entries land (their slots
+    form exactly one wrap-around window).
+    """
+    n_slots = cache["k"].shape[1]
+    s_new = k_new.shape[1]
+    if s_new > n_slots:  # only the trailing window survives
+        k_new = k_new[:, -n_slots:]
+        v_new = v_new[:, -n_slots:]
+        start = start + (s_new - n_slots)
+        s_new = n_slots
+    positions = start + jnp.arange(s_new, dtype=jnp.int32)
+    slots = positions % n_slots
+    # rotate the segment so slot i holds the entry with pos % n_slots == i
+    roll = start % n_slots
+    k_seg = jnp.roll(k_new, roll, axis=1)
+    v_seg = jnp.roll(v_new, roll, axis=1)
+    pos_seg = jnp.roll(positions, roll)
+    if s_new == n_slots:
+        return {"k": k_seg, "v": v_seg, "pos": pos_seg}
+    if s_new == 1:
+        # decode: one-hot masked write.  A dynamic-update-slice at a traced
+        # index on the (model-axis-)sharded slot dim makes GSPMD gather the
+        # whole cache (49 GiB/token on yi-9b decode_32k — §Perf); the
+        # one-hot select is elementwise, stays sharded, and reads/writes
+        # only cache-sized traffic.
+        hit = (jnp.arange(n_slots, dtype=jnp.int32) == slots[0])
+        k = jnp.where(hit[None, :, None, None], k_new.astype(cache["k"].dtype),
+                      cache["k"])
+        v = jnp.where(hit[None, :, None, None], v_new.astype(cache["v"].dtype),
+                      cache["v"])
+        pos = jnp.where(hit, positions[0], cache["pos"])
+        return {"k": k, "v": v, "pos": pos}
+    # non-wrapping multi-token segment (prefill shorter than the window)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slots[0], 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slots[0], 1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, slots[0], 0)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def write_latent_cache(cache: dict, latent_new, start: jax.Array):
+    n_slots = cache["latent"].shape[1]
+    s_new = latent_new.shape[1]
+    assert s_new <= n_slots
+    positions = start + jnp.arange(s_new, dtype=jnp.int32)
+    if s_new == 1:  # decode: one-hot masked write (see write_attn_cache)
+        hit = (jnp.arange(n_slots, dtype=jnp.int32) == positions[0] % n_slots)
+        lat = jnp.where(hit[None, :, None],
+                        latent_new.astype(cache["latent"].dtype),
+                        cache["latent"])
+        pos = jnp.where(hit, positions[0], cache["pos"])
+        return {"latent": lat, "pos": pos}
+    lat = jax.lax.dynamic_update_slice_in_dim(cache["latent"], latent_new,
+                                              positions[0] % n_slots, 1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions,
+                                              positions[0] % n_slots, 0)
+    return {"latent": lat, "pos": pos}

@@ -1,0 +1,158 @@
+"""Shared layer primitives: norms, RoPE, dense FFNs, embeddings.
+
+Functional style: ``init_*`` builds a param pytree (fp32 masters); ``*_fwd``
+consumes activations in the compute dtype.  Parameter tensors keep semantic
+axis order so the name-based sharding rules in ``parallel/sharding.py``
+stay simple.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std: float, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_fwd(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] \
+            + params["bias"]
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) int32 -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x (..., S, n, head_dim); cos/sin (..., S, head_dim//2) broadcast over n."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense FFNs
+# --------------------------------------------------------------------------
+
+def init_ffn(key, d: int, d_ff: int, kind: str):
+    ks = jax.random.split(key, 3)
+    std_in = d ** -0.5
+    std_out = d_ff ** -0.5
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": truncated_normal(ks[0], (d, d_ff), std_in),
+                "w_up": truncated_normal(ks[1], (d, d_ff), std_in),
+                "w_down": truncated_normal(ks[2], (d_ff, d), std_out)}
+    if kind == "gelu":
+        return {"w_up": truncated_normal(ks[0], (d, d_ff), std_in),
+                "b_up": jnp.zeros((d_ff,), jnp.float32),
+                "w_down": truncated_normal(ks[1], (d_ff, d), std_out),
+                "b_down": jnp.zeros((d,), jnp.float32)}
+    if kind == "rwkv_cm":
+        # RWKV-6 channel mix: token-shift mix + squared-relu gate
+        return {"mu_k": 0.5 * jnp.ones((d,), jnp.float32),
+                "mu_r": 0.5 * jnp.ones((d,), jnp.float32),
+                "w_k": truncated_normal(ks[0], (d, d_ff), std_in),
+                "w_v": truncated_normal(ks[1], (d_ff, d), std_out),
+                "w_r": truncated_normal(ks[2], (d, d), std_in)}
+    raise ValueError(kind)
+
+
+def ffn_fwd(params, x, kind: str, x_prev: Optional[jax.Array] = None):
+    """x (B, S, D).  ``x_prev`` is the token-shift input for rwkv_cm:
+    x shifted right by one along S (zeros or cache at position 0)."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        g = act(x @ params["w_gate"].astype(x.dtype))
+        u = x @ params["w_up"].astype(x.dtype)
+        return (g * u) @ params["w_down"].astype(x.dtype)
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype)
+                        + params["b_up"].astype(x.dtype))
+        return h @ params["w_down"].astype(x.dtype) \
+            + params["b_down"].astype(x.dtype)
+    if kind == "rwkv_cm":
+        assert x_prev is not None
+        mk = params["mu_k"].astype(x.dtype)
+        mr = params["mu_r"].astype(x.dtype)
+        xk = x * mk + x_prev * (1 - mk)
+        xr = x * mr + x_prev * (1 - mr)
+        k = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(x.dtype)))
+        r = jax.nn.sigmoid(xr @ params["w_r"].astype(x.dtype))
+        return r * (k @ params["w_v"].astype(x.dtype))
+    raise ValueError(kind)
+
+
+def token_shift(x: jax.Array, prev: Optional[jax.Array] = None):
+    """x shifted one step right along S; position 0 filled from ``prev``
+    (B, D) (decode cache) or zeros."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, tie: bool):
+    ks = jax.random.split(key, 2)
+    # 1/sqrt(d): with sqrt(d) embedding scaling (gemma) activations are
+    # unit-ish, and tied logits stay O(1) after the final norm
+    p = {"tok": truncated_normal(ks[0], (vocab, d), d ** -0.5)}
+    if not tie:
+        p["head"] = truncated_normal(ks[1], (d, vocab), d ** -0.5)
+    return p
+
+
+def embed_fwd(params, tokens, dtype, scale_by_dim: bool):
+    x = params["tok"].astype(dtype)[tokens]
+    if scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), dtype)
+    return x
+
+
+def logits_fwd(params, x, softcap: float = 0.0):
+    w = params.get("head")
+    if w is None:
+        w = params["tok"].T
+    logits = x @ w.astype(x.dtype)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,394 @@
+"""Model assembly: embedding -> stages of scanned layer patterns -> logits.
+
+A stage scans ``repeat`` groups; each group applies its ``pattern`` of layer
+specs sequentially (HLO size = O(|pattern|), compile time independent of
+depth).  Parameters and caches are stacked along the leading repeat axis.
+
+Three modes share one layer implementation:
+  train    full-sequence teacher forcing, no cache I/O, remat-wrapped
+  prefill  full sequence + writes KV/recurrent caches (serving cold start)
+  decode   single token against the caches (serving steady state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import kvcache as kc
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models.attention import MaskSpec
+from repro.models.config import (AttentionSpec, LayerSpec, ModelConfig, Stage)
+
+CROSS_ATTN_SPEC_OVERRIDES = dict(use_rope=False, causal=False, window=None)
+
+
+class ShardCtx(NamedTuple):
+    """Distribution context (DESIGN.md §4): batch over ``dp`` axes, sequence
+    over ``cp_axis`` (context parallelism), weights' TP axis ``tp``."""
+    mesh: Any
+    dp: Any                        # batch spec entry (axis, tuple, or None)
+    cp_axis: Optional[str]         # sequence axis (None = unsharded seq)
+    tp: Optional[str]              # model/tensor axis
+
+    def act_spec(self):
+        from jax.sharding import PartitionSpec as P
+        return P(self.dp, self.cp_axis, None)
+
+    def kv_spec(self, rank: int = 4):
+        from jax.sharding import PartitionSpec as P
+        return P(self.dp, *([None] * (rank - 1)))
+
+
+class Ctx(NamedTuple):
+    """Per-call context threaded through the layer stack."""
+    mode: str                      # "train" | "prefill" | "decode"
+    q_pos: jax.Array               # (S,) global positions of this segment
+    start: Any                     # scalar: global position of q_pos[0]
+    prefix_len: int                # prefix-LM bidirectional span
+    enc_out: Optional[jax.Array]   # encoder output (cross-attention source)
+    kv_block: int
+    scan_chunk: Optional[int]      # recurrent chunk override
+    shard: Optional[ShardCtx] = None
+
+
+def _cross_spec(a: AttentionSpec) -> AttentionSpec:
+    return dataclasses.replace(a, **CROSS_ATTN_SPEC_OVERRIDES)
+
+
+# --------------------------------------------------------------------------
+# per-layer init / forward
+# --------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict = {"ln1": L.init_norm(cfg.norm, d), "ln2": L.init_norm(cfg.norm, d)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_lib.init_attention(ks[0], d, spec.attn)
+    elif spec.mixer == "rglru":
+        p["mixer"] = rec_lib.init_rglru(ks[0], d, spec.recurrent)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = rec_lib.init_rwkv6(ks[0], d, spec.recurrent)
+    elif spec.mixer == "spectral":
+        pass  # parameter-free Fourier mixing (FNet)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["ln_cross"] = L.init_norm(cfg.norm, d)
+        p["cross"] = attn_lib.init_attention(ks[1], d, _cross_spec(spec.attn))
+    if spec.ffn == "moe":
+        p["ffn"] = moe_lib.init_moe(ks[2], d, spec.moe)
+    else:
+        p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff, spec.ffn)
+    return p
+
+
+def _self_attention(p, h, spec: LayerSpec, cfg: ModelConfig, ctx: Ctx, cache):
+    a = spec.attn
+    ms = MaskSpec(causal=a.causal,
+                  window=a.window,
+                  prefix_len=ctx.prefix_len if cfg.prefix_lm else 0)
+    # context parallelism: queries stay sequence-sharded; (small, GQA) K/V
+    # are projected from LOCAL x, then gathered along the cp axis
+    # (DESIGN.md §4, §Perf)
+    kv_spec = kv_local = None
+    if ctx.shard is not None and ctx.mode != "decode":
+        from jax.sharding import PartitionSpec as P
+        kv_spec = ctx.shard.kv_spec()
+        kv_local = P(ctx.shard.dp, ctx.shard.cp_axis, None, None)
+    if ctx.mode == "train":
+        y, _ = attn_lib.attention_fwd(p["mixer"], h, a, ms, ctx.q_pos,
+                                      kv_block=ctx.kv_block, kv_spec=kv_spec,
+                                      kv_local_spec=kv_local)
+        return y, cache
+    if ctx.mode == "prefill":
+        y, kv = attn_lib.attention_fwd(p["mixer"], h, a, ms, ctx.q_pos,
+                                       kv_block=ctx.kv_block, kv_spec=kv_spec,
+                                       kv_local_spec=kv_local)
+        if a.kind == "mla":
+            cache = {**cache, "self": kc.write_latent_cache(
+                cache["self"], kv, ctx.start)}
+        else:
+            cache = {**cache, "self": kc.write_attn_cache(
+                cache["self"], kv[0], kv[1], ctx.start)}
+        return y, cache
+    # decode: project this token, write, attend over the cache.  The whole
+    # (sequence-sharded) cache is consumed in ONE blockwise step: a scan
+    # over blocks of a sharded axis would force per-step gathers, whereas
+    # the single-step path lowers to GSPMD partial-softmax reductions
+    # (flash-decoding; EXPERIMENTS.md §Perf).
+    c = cache["self"]
+    if a.kind == "mla":
+        latent_new = attn_lib.mla_project_latent(p["mixer"], h, a)
+        c = kc.write_latent_cache(c, latent_new, ctx.start)
+        y, _ = attn_lib.attention_fwd(p["mixer"], h, a, ms, ctx.q_pos,
+                                      kv=c["latent"], k_pos=c["pos"],
+                                      kv_block=c["latent"].shape[1])
+    else:
+        k_new, v_new = attn_lib.gqa_project_kv(p["mixer"], h, a, ctx.q_pos)
+        c = kc.write_attn_cache(c, k_new, v_new, ctx.start)
+        y, _ = attn_lib.attention_fwd(p["mixer"], h, a, ms, ctx.q_pos,
+                                      kv=(c["k"], c["v"]), k_pos=c["pos"],
+                                      kv_block=c["k"].shape[1])
+    return y, {**cache, "self": c}
+
+
+def _cross_attention(p, h, spec: LayerSpec, cfg: ModelConfig, ctx: Ctx, cache):
+    a = _cross_spec(spec.attn)
+    ms = MaskSpec(causal=False)
+    if ctx.mode == "decode":
+        c = cache["cross"]
+        y, _ = attn_lib.attention_fwd(p["cross"], h, a, ms, ctx.q_pos,
+                                      kv=(c["k"], c["v"]), k_pos=c["pos"],
+                                      kv_block=ctx.kv_block)
+        return y, cache
+    enc = ctx.enc_out.astype(h.dtype)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    k_enc, v_enc = attn_lib.gqa_project_kv(p["cross"], enc, a, enc_pos)
+    y, _ = attn_lib.attention_fwd(p["cross"], h, a, ms, ctx.q_pos,
+                                  kv=(k_enc, v_enc), k_pos=enc_pos,
+                                  kv_block=ctx.kv_block)
+    if ctx.mode == "prefill":
+        cache = {**cache, "cross": {"k": k_enc, "v": v_enc, "pos": enc_pos}}
+    return y, cache
+
+
+def _recurrent(p, h, spec: LayerSpec, cfg: ModelConfig, ctx: Ctx, cache):
+    r = spec.recurrent
+    rc = cache.get("rec") if cache is not None else None
+    # context parallelism: cross-shard affine prefix scan (LASP-style) when
+    # the sequence axis is sharded and this is a multi-token pass
+    cp = None
+    if (ctx.shard is not None and ctx.shard.cp_axis is not None
+            and h.shape[1] > 1):
+        cp = (ctx.shard.mesh, ctx.shard.cp_axis, ctx.shard.dp)
+    if r.kind == "rglru":
+        state = None if ctx.mode == "train" else rec_lib.RGLRUState(
+            h=rc["h"], conv=rc["conv"])
+        y, new = rec_lib.rglru_fwd(p["mixer"], h, r, state, ctx.scan_chunk,
+                                   cp=cp)
+        if ctx.mode != "train":
+            cache = {**cache, "rec": {**rc, "h": new.h, "conv": new.conv}}
+    else:
+        state = None if ctx.mode == "train" else rec_lib.RWKVState(
+            s=rc["s"], x_prev=rc["x_prev"])
+        y, new = rec_lib.rwkv6_fwd(p["mixer"], h, r, state, ctx.scan_chunk,
+                                   cp=cp)
+        if ctx.mode != "train":
+            cache = {**cache, "rec": {**rc, "s": new.s, "x_prev": new.x_prev}}
+    return y, cache
+
+
+def layer_fwd(p, x, spec: LayerSpec, cfg: ModelConfig, ctx: Ctx, cache):
+    h = L.norm_fwd(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, cache = _self_attention(p, h, spec, cfg, ctx, cache)
+    elif spec.mixer == "spectral":
+        from repro.models.spectral import spectral_mixer
+        if ctx.shard is not None and ctx.shard.cp_axis is not None:
+            y = spectral_mixer(h, seq_axis_name=ctx.shard.cp_axis,
+                               mesh=ctx.shard.mesh, batch_spec=ctx.shard.dp)
+        else:
+            y = spectral_mixer(h)
+    else:
+        y, cache = _recurrent(p, h, spec, cfg, ctx, cache)
+    x = x + y
+    if spec.cross_attn:
+        hc = L.norm_fwd(p["ln_cross"], x, cfg.norm, cfg.norm_eps)
+        y, cache = _cross_attention(p, hc, spec, cfg, ctx, cache)
+        x = x + y
+    h2 = L.norm_fwd(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "moe":
+        if ctx.mode == "train":
+            aux = moe_lib.aux_load_balance_loss(p["ffn"], h2, spec.moe)
+        if (ctx.shard is not None and ctx.shard.tp is not None
+                and h2.shape[1] > 1):
+            # sharding-explicit dispatch (ep / tp modes) — GSPMD's global
+            # scatter resolution all-reduces the dispatch buffers
+            # (EXPERIMENTS.md §Perf A1/B1).  Decode (S=1) keeps the plain
+            # path: its scatter is token-proportional and tiny, whereas the
+            # tp-mode weight gather is weight-proportional (§Perf B3).
+            from repro.models.moe_sharded import moe_fwd_sharded
+            y = moe_fwd_sharded(p["ffn"], h2, spec.moe,
+                                mesh=ctx.shard.mesh, dp=ctx.shard.dp,
+                                cp_axis=ctx.shard.cp_axis,
+                                tp_axis=ctx.shard.tp)
+        else:
+            y = moe_lib.moe_fwd(p["ffn"], h2, spec.moe)
+    elif spec.ffn == "rwkv_cm":
+        if ctx.mode == "train":
+            prev = None
+        else:
+            prev = cache["rec"]["x_prev_ffn"]
+        y = L.ffn_fwd(p["ffn"], h2, "rwkv_cm", x_prev=L.token_shift(h2, prev))
+        if ctx.mode != "train":
+            cache = {**cache,
+                     "rec": {**cache["rec"], "x_prev_ffn": h2[:, -1]}}
+    else:
+        y = L.ffn_fwd(p["ffn"], h2, spec.ffn)
+    return x + y, cache, aux
+
+
+# --------------------------------------------------------------------------
+# whole-model init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3 + len(cfg.stages))
+    params: dict = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model,
+                                  cfg.tie_embeddings),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model),
+    }
+    stages = []
+    for si, stage in enumerate(cfg.stages):
+        skeys = jax.random.split(ks[2 + si], stage.repeat)
+        stage_p = {}
+        for pi, spec in enumerate(stage.pattern):
+            stage_p[f"p{pi}"] = jax.vmap(
+                lambda k, s=spec: init_layer(k, cfg, s))(
+                    jax.vmap(lambda k, i=pi: jax.random.fold_in(k, i))(skeys))
+        stages.append(stage_p)
+    params["stages"] = stages
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        ekeys = jax.random.split(ks[1], e.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: init_layer(k, cfg, e.layer))(ekeys),
+            "final_norm": L.init_norm(cfg.norm, cfg.d_model),
+        }
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0,
+                dtype=jnp.bfloat16):
+    """Stacked caches mirroring the stage structure."""
+    caches = []
+    for stage in cfg.stages:
+        stage_c = {}
+        for pi, spec in enumerate(stage.pattern):
+            def one(_, s=spec):
+                return kc.init_layer_cache(
+                    s, cfg.d_model, batch, max_len, enc_len,
+                    s.attn.n_kv_heads if s.attn else 0, dtype)
+            stage_c[f"p{pi}"] = jax.vmap(one)(jnp.arange(stage.repeat))
+        caches.append(stage_c)
+    return caches
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _stage_scan(stage_p, stage: Stage, x, cfg, ctx: Ctx, stage_cache,
+                remat: bool, remat_policy: str = "nothing"):
+    """Scan the repeat axis of one stage."""
+
+    def body(carry, xs):
+        h, aux_sum = carry
+        params_t, cache_t = xs
+        new_cache_t = {}
+        for pi, spec in enumerate(stage.pattern):
+            cache_i = cache_t[f"p{pi}"] if cache_t is not None else None
+            h, cache_i, aux = layer_fwd(params_t[f"p{pi}"], h, spec, cfg,
+                                        ctx, cache_i)
+            new_cache_t[f"p{pi}"] = cache_i
+            aux_sum = aux_sum + aux
+        return (h, aux_sum), (new_cache_t if stage_cache is not None else None)
+
+    if remat:
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy])
+    (x, aux_sum), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stage_p, stage_cache))
+    return x, new_cache, aux_sum
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, kv_block: int = 1024):
+    """Encoder stack (whisper): stub frame embeddings -> memory."""
+    e = cfg.encoder
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    ctx = Ctx(mode="train", q_pos=pos, start=0, prefix_len=0, enc_out=None,
+              kv_block=kv_block, scan_chunk=None)
+
+    def body(h, p_t):
+        h, _, _ = layer_fwd(p_t, h, e.layer, cfg, ctx, None)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return L.norm_fwd(params["encoder"]["final_norm"], x, cfg.norm,
+                      cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: Optional[jax.Array] = None, *,
+            mode: str = "train", caches=None, start=0,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            kv_block: int = 1024, scan_chunk: Optional[int] = None,
+            remat: Optional[bool] = None, return_hidden: bool = False,
+            shard: Optional[ShardCtx] = None, remat_policy: str = "nothing"):
+    """Token ids (B, S) -> logits (B, S', vocab).
+
+    ``prefix_embeds`` (B, P, D): modality-stub embeddings prepended to the
+    token embeddings (paligemma patches / stand-alone whisper frames go to
+    ``encode`` instead); emitted logits cover only the token positions.
+    ``start``: global position of tokens[0] (decode step index).
+    ``shard``: distribution context (constraints applied at stage
+    boundaries; None = single-device semantics).
+    Returns (logits, caches) — caches is None in train mode.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    remat = (mode == "train") if remat is None else remat
+    x = L.embed_fwd(params["embed"], tokens, dtype, cfg.emb_scale_by_dim)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    s = x.shape[1]
+    q_pos = jnp.asarray(start, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+    ctx = Ctx(mode=mode, q_pos=q_pos, start=jnp.asarray(start, jnp.int32),
+              prefix_len=n_prefix if cfg.prefix_lm else 0,
+              enc_out=enc_out, kv_block=kv_block, scan_chunk=scan_chunk,
+              shard=shard)
+
+    def constrain(h):
+        if shard is None or mode == "decode":
+            return h
+        return jax.lax.with_sharding_constraint(h, shard.act_spec())
+
+    x = constrain(x)
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, stage in enumerate(cfg.stages):
+        stage_cache = caches[si] if caches is not None else None
+        x, nc, aux = _stage_scan(params["stages"][si], stage, x, cfg, ctx,
+                                 stage_cache, remat, remat_policy)
+        aux_total = aux_total + aux
+        x = constrain(x)
+        new_caches.append(nc)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    out_caches = new_caches if caches is not None else None
+    if return_hidden:
+        if mode == "train":
+            return x, out_caches, aux_total
+        return x, out_caches
+    logits = L.logits_fwd(params["embed"], x, cfg.logit_softcap)
+    return logits, out_caches

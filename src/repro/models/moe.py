@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Covers Mixtral (8e top-2) and DeepSeek-V2 (2 shared + 160 routed top-6).
+Dispatch is the sort/scatter formulation (no O(T·E·C) dense dispatch
+tensors): flatten (token, choice) pairs, order by expert, rank within
+expert, drop beyond capacity, gather into an (E, C, D) buffer, batched
+expert matmul, weighted scatter back.
+
+Sharding: the (E, C, D) buffer is constrained expert-dim -> ``model`` when
+E divides the axis (expert parallelism: GSPMD inserts the dispatch
+all-to-all), otherwise the per-expert ffn dim is sharded (tensor parallelism
+inside each expert) — DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoESpec
+from repro.models.layers import init_ffn, ffn_fwd, truncated_normal
+
+
+def init_moe(key, d: int, m: MoESpec):
+    ks = jax.random.split(key, 5)
+    e, f = m.n_experts, m.d_ff_expert
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": truncated_normal(ks[0], (d, e), std_in),
+        "w_gate": truncated_normal(ks[1], (e, d, f), std_in),
+        "w_up": truncated_normal(ks[2], (e, d, f), std_in),
+        "w_down": truncated_normal(ks[3], (e, f, d), std_out),
+    }
+    if m.n_shared:
+        p["shared"] = init_ffn(ks[4], d, m.n_shared * f, "swiglu")
+    return p
+
+
+def _capacity(n_tokens: int, m: MoESpec) -> int:
+    c = int(math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for clean tiling
+
+
+def moe_fwd(params, x, m: MoESpec, *, expert_axis: Optional[str] = None,
+            router_dtype=jnp.float32):
+    """x (B, S, D) -> (B, S, D).  ``expert_axis``: mesh axis for the expert
+    dimension of the dispatch buffer (None = let GSPMD decide)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    xt = x.reshape(t, d)
+
+    # --- routing (fp32 for a stable softmax) ------------------------------
+    logits = (xt.astype(router_dtype)
+              @ params["router"].astype(router_dtype))        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renormalize
+
+    # --- dispatch: order (token, choice) pairs by expert -------------------
+    cap = _capacity(t, m)
+    flat_e = topk_idx.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)                    # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]            # rank in expert
+    keep = pos_in_e < cap
+    slot = sorted_e * cap + jnp.clip(pos_in_e, 0, cap - 1)     # (T*k,)
+    token_of = order // k                                      # source token
+
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * cap)].set(
+        xt[token_of], mode="drop")                             # dropped rows: no-op
+    buf = buf.reshape(e, cap, d)
+    if expert_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(
+            buf, P(expert_axis, None, None))
+
+    # --- expert computation (batched SwiGLU) -------------------------------
+    dt = x.dtype
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"].astype(dt))
+    y = y.reshape(e * cap, d)
+
+    # --- combine: gather back, weight by gate, sum the k choices ----------
+    gathered = jnp.where(keep[:, None], y[slot], 0.0)          # (T*k, D)
+    w = gate_vals.reshape(-1)[order].astype(dt)                # gate per pair
+    out = jnp.zeros((t, d), dt).at[token_of].add(gathered * w[:, None])
+
+    if m.n_shared:
+        out = out + ffn_fwd(params["shared"], xt, "swiglu")
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(params, x, m: MoESpec):
+    """Switch-style load-balance auxiliary loss (fraction * probability)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d).astype(jnp.float32)
+    probs = jax.nn.softmax(xt @ params["router"].astype(jnp.float32), -1)
+    _, topk_idx = jax.lax.top_k(probs, m.top_k)
+    hits = jnp.zeros((m.n_experts,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    frac_tokens = hits / jnp.sum(hits)
+    frac_prob = jnp.mean(probs, axis=0)
+    return m.n_experts * jnp.sum(frac_tokens * frac_prob)

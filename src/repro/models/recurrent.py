@@ -1,0 +1,281 @@
+"""Linear-recurrence token mixers: Griffin RG-LRU and RWKV-6 (Finch).
+
+Both are chunked scans built on numerically-safe decay algebra: within a
+chunk every exponential is of a **non-positive** quantity (cumulative
+log-decays are non-increasing), so nothing overflows regardless of decay
+magnitude; across chunks a small sequential ``lax.scan`` carries the state.
+
+  RG-LRU  vector state  h_t = a_t ⊙ h_{t-1} + √(1-a_t²) i_t ξ_t
+  RWKV-6  matrix state  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t,
+                        o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Decode (S=1) degenerates to the plain one-step update.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import RecurrentSpec
+from repro.models.layers import truncated_normal, token_shift
+
+
+# --------------------------------------------------------------------------
+# generic chunked scans
+# --------------------------------------------------------------------------
+
+def vector_recurrence(log_a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int = 256):
+    """h_t = exp(log_a_t) ⊙ h_{t-1} + b_t over (B, T, D); h0 (B, D).
+
+    Returns (h (B,T,D), h_last (B,D)).  Within-chunk via associative scan,
+    across chunks via sequential scan.
+    """
+    bsz, t, d = b.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+    la = log_a.reshape(bsz, nc, c, d)
+    bb = b.reshape(bsz, nc, c, d)
+
+    def assoc(e1, e2):
+        (l1, b1), (l2, b2) = e1, e2
+        return l1 + l2, jnp.exp(l2) * b1 + b2
+
+    def chunk_step(h, xs):
+        la_c, b_c = xs                                  # (B, C, D)
+        l_in, b_in = jax.lax.associative_scan(assoc, (la_c, b_c), axis=1)
+        h_t = jnp.exp(l_in) * h[:, None, :] + b_in      # (B, C, D)
+        return h_t[:, -1], h_t
+
+    h_last, h_all = jax.lax.scan(
+        chunk_step, h0, (jnp.moveaxis(la, 1, 0), jnp.moveaxis(bb, 1, 0)))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(bsz, t, d)
+    return h_all, h_last
+
+
+def matrix_recurrence(log_w, k, v, r, u, s0, chunk: int = 64):
+    """RWKV-style matrix-state scan.
+
+    log_w, k, r : (B, T, H, K)   v : (B, T, H, V)   u : (H, K)
+    s0          : (B, H, K, V)
+    Returns (o (B,T,H,V), s_last).  All decay exponentials are ≤ 0.
+    """
+    bsz, t, h, dk = k.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+
+    def reshape(x):
+        return jnp.moveaxis(x.reshape(bsz, nc, c, *x.shape[2:]), 1, 0)
+
+    lw_c, k_c, v_c, r_c = map(reshape, (log_w, k, v, r))
+
+    def chunk_step(s, xs):
+        lw, kk, vv, rr = xs                      # (B, C, H, K) / (B,C,H,V)
+        dcum = jnp.cumsum(lw, axis=1)            # non-increasing in t
+        d_prev = dcum - lw                       # cum through t-1
+        # state readout: o_state[t] = (r_t ⊙ exp(d_prev[t])) · S_entry
+        q_dec = rr * jnp.exp(d_prev)
+        o_state = jnp.einsum("bthk,bhkv->bthv", q_dec, s)
+        # intra-chunk: scores[t,s] = Σ_K r_t exp(d_prev[t]-dcum[s]) k_s, s<t
+        expdiff = jnp.exp(d_prev[:, :, None] - dcum[:, None, :, :])  # (B,C,C,H,K)
+        scores = jnp.einsum("bthk,btshk,bshk->bths", rr, expdiff, kk)
+        mask = jnp.tril(jnp.ones((c, c), bool), -1)     # strict s < t
+        scores = jnp.where(mask[None, :, None, :], scores, 0.0)
+        o_intra = jnp.einsum("bths,bshv->bthv", scores, vv)
+        # current-token bonus u:  o += Σ_K (r_t ⊙ u ⊙ k_t) v_t
+        o_bonus = jnp.einsum("bthk,bthv->bthv", rr * u[None, None] * kk, vv)
+        o = o_state + o_intra + o_bonus
+        # state update: S_exit = diag(exp(dcum[-1])) S + Σ_t exp(dcum[-1]-dcum[t]) k v
+        d_last = dcum[:, -1]                     # (B, H, K)
+        k_dec = kk * jnp.exp(d_last[:, None] - dcum)
+        s_new = jnp.exp(d_last)[..., None] * s \
+            + jnp.einsum("bthk,bthv->bhkv", k_dec, vv)
+        return s_new, o
+
+    s_last, o_all = jax.lax.scan(chunk_step, s0, (lw_c, k_c, v_c, r_c))
+    o_all = jnp.moveaxis(o_all, 0, 1).reshape(bsz, t, h, dv)
+    return o_all, s_last
+
+
+# --------------------------------------------------------------------------
+# Griffin RG-LRU block (recurrentgemma)
+# --------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, d: int, r: RecurrentSpec):
+    ds = r.d_state or d
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "w_in": truncated_normal(ks[0], (d, ds), std),
+        "w_gate": truncated_normal(ks[1], (d, ds), std),
+        "w_out": truncated_normal(ks[2], (ds, d), ds ** -0.5),
+        "conv_w": truncated_normal(ks[3], (r.conv_width, ds), 0.1),
+        "w_rg": truncated_normal(ks[4], (ds, ds), ds ** -0.5),
+        "w_ig": truncated_normal(ks[5], (ds, ds), ds ** -0.5),
+        "lam": jax.random.uniform(ks[6], (ds,), jnp.float32, 2.0, 6.0),
+        "b_rg": jnp.zeros((ds,), jnp.float32),
+        "b_ig": jnp.zeros((ds,), jnp.float32),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, Ds)
+    conv: jax.Array       # (B, W-1, Ds) trailing inputs
+
+
+def rglru_init_state(batch: int, d_state: int, conv_width: int, dtype):
+    return RGLRUState(h=jnp.zeros((batch, d_state), jnp.float32),
+                      conv=jnp.zeros((batch, conv_width - 1, d_state), dtype))
+
+
+def _causal_conv(x, w, prev):
+    """Depthwise causal conv along T: x (B,T,Ds), w (W,Ds), prev (B,W-1,Ds)."""
+    width = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    t = x.shape[1]
+    for i in range(width):
+        out = out + xp[:, i: i + t] * w[width - 1 - i].astype(x.dtype)
+    return out
+
+
+def rglru_fwd(params, x, r: RecurrentSpec, state: Optional[RGLRUState],
+              chunk: Optional[int] = None, cp=None):
+    """Griffin recurrent block: x (B,T,D) -> (B,T,D), new state.
+
+    ``cp`` = (mesh, cp_axis, batch_spec): run the scan sequence-parallel
+    (parallel/seqscan.py) when T is sharded."""
+    dt = x.dtype
+    ds = params["w_in"].shape[1]
+    bsz, t, _ = x.shape
+    if state is None:
+        state = rglru_init_state(bsz, ds, r.conv_width, dt)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt))
+    xi = x @ params["w_in"].astype(dt)
+    xc = _causal_conv(xi, params["conv_w"], state.conv)
+    # RG-LRU gates (fp32 for the decay math)
+    xf = xc.astype(jnp.float32)
+    rg = jax.nn.sigmoid(xf @ params["w_rg"] + params["b_rg"])
+    ig = jax.nn.sigmoid(xf @ params["w_ig"] + params["b_ig"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * rg      # ≤ 0
+    gated_x = ig * xf
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    if cp is not None:
+        from repro.parallel.seqscan import cp_vector_recurrence
+        mesh, cp_axis, batch_spec = cp
+        h, h_last = cp_vector_recurrence(
+            log_a, b, state.h, mesh=mesh, cp_axis=cp_axis,
+            batch_spec=batch_spec, chunk=chunk or r.chunk or 256)
+    else:
+        h, h_last = vector_recurrence(log_a, b, state.h,
+                                      chunk or r.chunk or 256)
+    new_conv = jnp.concatenate([state.conv.astype(dt), xi], axis=1)[:, -(r.conv_width - 1):]
+    y = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y, RGLRUState(h=h_last, conv=new_conv)
+
+
+# --------------------------------------------------------------------------
+# RWKV-6 time-mix block (Finch)
+# --------------------------------------------------------------------------
+
+RWKV_LORA = 32
+
+
+def init_rwkv6(key, d: int, r: RecurrentSpec):
+    n_heads = r.n_heads or d // 64
+    dk = d // n_heads
+    ks = jax.random.split(key, 12)
+    std = d ** -0.5
+    return {
+        "mu_base": 0.5 * jnp.ones((d,), jnp.float32),
+        "mu_rkvwg": 0.5 * jnp.ones((5, d), jnp.float32),
+        "lora_a": truncated_normal(ks[0], (d, 5 * RWKV_LORA), std),
+        "lora_b": truncated_normal(ks[1], (5, RWKV_LORA, d), RWKV_LORA ** -0.5),
+        "w_r": truncated_normal(ks[2], (d, d), std),
+        "w_k": truncated_normal(ks[3], (d, d), std),
+        "w_v": truncated_normal(ks[4], (d, d), std),
+        "w_g": truncated_normal(ks[5], (d, d), std),
+        "w_o": truncated_normal(ks[6], (d, d), std),
+        "decay_base": jnp.full((d,), -1.5, jnp.float32),
+        "decay_a": truncated_normal(ks[7], (d, RWKV_LORA * 2), std),
+        "decay_b": truncated_normal(ks[8], (RWKV_LORA * 2, d),
+                                    (RWKV_LORA * 2) ** -0.5),
+        "bonus_u": truncated_normal(ks[9], (n_heads, dk), 0.3),
+        "ln_scale": jnp.ones((n_heads, dk), jnp.float32),
+    }
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array          # (B, H, K, V)
+    x_prev: jax.Array     # (B, D) last input (token shift)
+
+
+def rwkv6_init_state(batch: int, d: int, n_heads: int, dtype):
+    dk = d // n_heads
+    return RWKVState(s=jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+                     x_prev=jnp.zeros((batch, d), dtype))
+
+
+def rwkv6_fwd(params, x, r: RecurrentSpec, state: Optional[RWKVState],
+              chunk: Optional[int] = None, cp=None):
+    """RWKV-6 time mix: x (B,T,D) -> (B,T,D), new state.
+
+    ``cp`` = (mesh, cp_axis, batch_spec) enables the sequence-parallel
+    scan."""
+    dt = x.dtype
+    bsz, t, d = x.shape
+    n_heads = r.n_heads or d // 64
+    dk = d // n_heads
+    if state is None:
+        state = rwkv6_init_state(bsz, d, n_heads, dt)
+
+    xx = token_shift(x, state.x_prev)
+    # data-dependent token-shift mixing (5-way LoRA)
+    base = x + (xx - x) * params["mu_base"].astype(dt)
+    z = jnp.tanh(base @ params["lora_a"].astype(dt))
+    z = z.reshape(bsz, t, 5, RWKV_LORA)
+    mix = params["mu_rkvwg"].astype(dt)[None, None] \
+        + jnp.einsum("btfl,fld->btfd", z, params["lora_b"].astype(dt))
+    xr, xk, xv, xw, xg = [x + (xx - x) * mix[:, :, i] for i in range(5)]
+
+    rr = (xr @ params["w_r"].astype(dt)).reshape(bsz, t, n_heads, dk)
+    kk = (xk @ params["w_k"].astype(dt)).reshape(bsz, t, n_heads, dk)
+    vv = (xv @ params["w_v"].astype(dt)).reshape(bsz, t, n_heads, dk)
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+
+    # data-dependent decay (fp32, log-space): log w = -exp(...)  ≤ 0
+    dec = params["decay_base"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["decay_a"]) @ params["decay_b"]
+    log_w = -jnp.exp(dec).reshape(bsz, t, n_heads, dk)
+
+    if cp is not None:
+        from repro.parallel.seqscan import cp_matrix_recurrence
+        mesh, cp_axis, batch_spec = cp
+        o, s_last = cp_matrix_recurrence(
+            log_w, kk.astype(jnp.float32), vv.astype(jnp.float32),
+            rr.astype(jnp.float32), params["bonus_u"], state.s,
+            mesh=mesh, cp_axis=cp_axis, batch_spec=batch_spec,
+            chunk=chunk or r.chunk or 64)
+    else:
+        o, s_last = matrix_recurrence(
+            log_w, kk.astype(jnp.float32), vv.astype(jnp.float32),
+            rr.astype(jnp.float32), params["bonus_u"], state.s,
+            chunk or r.chunk or 64)
+
+    # per-head RMS norm (GroupNorm analogue) + gate + out proj
+    var = jnp.mean(jnp.square(o), axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(var + 1e-6) * params["ln_scale"][None, None]
+    y = (o.reshape(bsz, t, d).astype(dt) * g) @ params["w_o"].astype(dt)
+    return y, RWKVState(s=s_last, x_prev=x[:, -1].astype(dt))

@@ -1,0 +1,9 @@
+"""Distribution substrate: sharding rules, chunked loss, sequence-parallel
+scans, cross-pod gradient compression."""
+
+from repro.parallel.sharding import (MeshAxes, cache_specs, param_shardings,
+                                     param_specs)
+from repro.parallel.loss import chunked_cross_entropy
+
+__all__ = ["MeshAxes", "cache_specs", "chunked_cross_entropy",
+           "param_shardings", "param_specs"]

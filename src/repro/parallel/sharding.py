@@ -1,0 +1,213 @@
+"""Name-based parameter sharding rules (t5x/MaxText-style partition rules).
+
+Every parameter path is matched against ordered regex rules; each rule lists
+candidate PartitionSpecs in preference order and the first one whose sharded
+dims divide evenly is taken (so e.g. Mixtral's 8-expert tensors fall back
+from expert-parallel to per-expert tensor-parallel on a 16-way axis, and
+gemma3's 8 heads fall back from head-sharding to head-dim-sharding).
+
+Logical axes:  fsdp -> "data"   tp -> "model"   (pod stays a pure data axis
+unless ``shard_over_pod`` — ZeRO across pods — is requested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    fsdp: str = "data"
+    tp: str = "model"
+    pod: Optional[str] = None          # present on the multi-pod mesh
+    shard_params_over_pod: bool = False
+
+    @property
+    def fsdp_axes(self):
+        if self.pod is not None and self.shard_params_over_pod:
+            return (self.pod, self.fsdp)
+        return self.fsdp
+
+    @property
+    def dp_axes(self):
+        """Batch axes (activations)."""
+        return (self.pod, self.fsdp) if self.pod is not None else (self.fsdp,)
+
+
+# Each entry: (path regex, [candidate spec templates]); templates use the
+# placeholders "fsdp"/"tp"; None = replicated dim.  First divisible wins.
+PARAM_RULES: list[tuple[str, list[tuple]]] = [
+    # embeddings
+    (r"embed/tok$", [("tp", "fsdp"), (None, "fsdp"), (None, None)]),
+    (r"embed/head$", [("fsdp", "tp"), ("fsdp", None), (None, None)]),
+    # attention (D, H, hd) / (H, hd, D)
+    (r"(mixer|cross)/wq$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                            ("fsdp", None, None)]),
+    (r"(mixer|cross)/wk$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                            ("fsdp", None, None)]),
+    (r"(mixer|cross)/wv$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                            ("fsdp", None, None)]),
+    (r"(mixer|cross)/wo$", [("tp", None, "fsdp"), (None, "tp", "fsdp"),
+                            (None, None, "fsdp")]),
+    # MLA
+    (r"mixer/w_dkv$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"mixer/w_dq$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"mixer/w_uq$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                      ("fsdp", None, None)]),
+    (r"mixer/w_uk$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                      ("fsdp", None, None)]),
+    (r"mixer/w_uv$", [("fsdp", "tp", None), ("fsdp", None, "tp"),
+                      ("fsdp", None, None)]),
+    # MoE (E, D, F) — expert-parallel first, then intra-expert TP
+    (r"ffn/w_gate$", [("tp", "fsdp", None), (None, "fsdp", "tp"),
+                      ("fsdp", "tp"), ("fsdp", None)]),
+    (r"ffn/w_up$", [("tp", "fsdp", None), (None, "fsdp", "tp"),
+                    ("fsdp", "tp"), ("fsdp", None)]),
+    (r"ffn/w_down$", [("tp", None, "fsdp"), (None, "tp", "fsdp"),
+                      ("tp", "fsdp"), (None, "fsdp")]),
+    (r"ffn/router$", [("fsdp", None)]),
+    (r"ffn/shared/", [("fsdp", "tp"), ("tp", "fsdp"), ("fsdp", None)]),
+    # dense ffn two-dim fallbacks are covered above (w_gate/w_up/w_down)
+    (r"ffn/(w_k|w_r)$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"ffn/w_v$", [("tp", "fsdp"), (None, "fsdp")]),
+    (r"ffn/b_(up|down)$", [(None,)]),
+    # RG-LRU
+    (r"mixer/w_(in|gate)$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"mixer/w_out$", [("tp", "fsdp"), (None, "fsdp")]),
+    (r"mixer/w_(rg|ig)$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"mixer/conv_w$", [(None, "tp"), (None, None)]),
+    # RWKV-6
+    (r"mixer/w_[rkvgo]$", [("fsdp", "tp"), ("fsdp", None)]),
+    (r"mixer/lora_a$", [("fsdp", None)]),
+    (r"mixer/lora_b$", [(None, None, "fsdp")]),
+    (r"mixer/decay_a$", [("fsdp", None)]),
+    (r"mixer/decay_b$", [(None, "fsdp")]),
+    # small vectors: shard over fsdp when divisible, else replicate
+    (r"(scale|bias|lam|b_rg|b_ig|mu_\w+|decay_base)$", [("fsdp",), (None,)]),
+    (r"(bonus_u|ln_scale)$", [(None, None)]),
+    (r".*", [None]),  # fallback: replicate
+]
+
+
+def _resolve(template, axes: MeshAxes):
+    if template is None:
+        return P()
+    out = []
+    for t in template:
+        if t == "fsdp":
+            out.append(axes.fsdp_axes)
+        elif t == "tp":
+            out.append(axes.tp)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, spec):
+        if dim % _axis_size(mesh, entry):
+            return False
+    return True
+
+
+def spec_for(path: str, shape, mesh: Mesh, axes: MeshAxes,
+             stacked: bool) -> P:
+    """Resolve the PartitionSpec for one parameter."""
+    for pattern, candidates in PARAM_RULES:
+        if re.search(pattern, path):
+            for cand in candidates:
+                spec = _resolve(cand, axes)
+                core = shape[1:] if stacked else shape
+                if len(spec) not in (0, len(core)):
+                    continue
+                padded = P(*(list(spec) + [None] * (len(core) - len(spec))))
+                if _divisible(core, padded, mesh):
+                    return P(None, *padded) if stacked else padded
+            break
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh, axes: MeshAxes):
+    """Pytree of PartitionSpecs matching ``params``.
+
+    Parameters under ``stages`` or ``encoder/layers`` carry a leading
+    stacked-repeat dim that is never sharded.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        stacked = p.startswith("stages/") or p.startswith("encoder/layers/")
+        specs.append(spec_for(p, np.shape(leaf), mesh, axes, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh, axes: MeshAxes):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, axes),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(caches, mesh: Mesh, axes: MeshAxes):
+    """KV caches: batch -> dp axes, slot/seq axis -> tp (flash-decoding
+    layout).  Cache leaves are stacked over the stage-repeat dim (leading).
+
+    Shapes: k/v (L, B, S, KV, hd); latent (L, B, S, R); pos (L, S);
+    recurrent state (L, B, ...) — state stays batch-sharded only.
+    """
+    dp = axes.dp_axes
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = np.shape(leaf)
+        if p.endswith("/pos"):
+            return P(None, None)
+        name = p.rsplit("/", 1)[-1]
+        if name in ("k", "v"):
+            spec = [None, dp, axes.tp] + [None] * (len(shape) - 3)
+        elif name == "latent":
+            spec = [None, dp, axes.tp] + [None] * (len(shape) - 3)
+        else:  # recurrent state h/conv/s/x_prev...
+            spec = [None, dp] + [None] * (len(shape) - 2)
+        # drop shardings that don't divide
+        fixed = []
+        for dim, entry in zip(shape, spec):
+            fixed.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def logical_constraint(x, spec: P):
+    """with_sharding_constraint that tolerates a missing mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

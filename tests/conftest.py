@@ -1,0 +1,36 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here — unit tests and benches must see the real (single)
+device.  Multi-device tests spawn subprocesses with
+``--xla_force_host_platform_device_count`` set (see ``run_multidevice``).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 480) -> str:
+    """Run a python snippet in a subprocess with N virtual CPU devices.
+    Returns stdout; raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,127 @@
+"""Config registry and assigned-architecture dimensional exactness."""
+
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get_config, shape_supported
+from repro.configs.croft_fft import croft_128, croft_1024, paper_option
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    for arch in ASSIGNED:
+        full = get_config(arch)
+        smoke = get_config(arch, smoke=True)
+        assert full.n_layers > smoke.n_layers
+        assert smoke.param_count() < 1e7
+
+
+def test_unknown_arch():
+    with pytest.raises(KeyError):
+        get_config("nope-7b")
+
+
+# exact dims from the assignment table
+SPEC = {
+    "mixtral-8x22b": dict(L=56, d=6144, H=48, kv=8, ff=16384, v=32768),
+    "deepseek-v2-236b": dict(L=60, d=5120, H=128, ff=1536, v=102400),
+    "h2o-danube-3-4b": dict(L=24, d=3840, H=32, kv=8, ff=10240, v=32000),
+    "gemma3-4b": dict(L=34, d=2560, H=8, kv=4, ff=10240, v=262144),
+    "yi-34b": dict(L=60, d=7168, H=56, kv=8, ff=20480, v=64000),
+    "yi-9b": dict(L=48, d=4096, H=32, kv=4, ff=11008, v=64000),
+    "whisper-base": dict(L=6, d=512, H=8, kv=8, ff=2048, v=51865),
+    "recurrentgemma-9b": dict(L=38, d=4096, H=16, kv=1, ff=12288, v=256000),
+    "rwkv6-3b": dict(L=32, d=2560, ff=8960, v=65536),
+    "paligemma-3b": dict(L=18, d=2048, H=8, kv=1, ff=16384, v=257216),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_assigned_dims_exact(arch):
+    s = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == s["L"]
+    assert cfg.d_model == s["d"]
+    assert cfg.vocab == s["v"]
+    # find a representative layer
+    spec0 = cfg.stages[-1].pattern[0]
+    if arch == "deepseek-v2-236b":
+        assert spec0.moe.d_ff_expert == s["ff"]
+        assert spec0.moe.n_experts == 160 and spec0.moe.top_k == 6
+        assert spec0.moe.n_shared == 2
+        assert spec0.attn.kind == "mla" and spec0.attn.kv_lora_rank == 512
+        assert spec0.attn.n_heads == 128
+    elif arch == "mixtral-8x22b":
+        assert spec0.moe.d_ff_expert == s["ff"]
+        assert spec0.moe.n_experts == 8 and spec0.moe.top_k == 2
+        assert spec0.attn.n_heads == s["H"]
+        assert spec0.attn.n_kv_heads == s["kv"]
+        assert spec0.attn.window is not None  # SWA
+    elif arch == "rwkv6-3b":
+        assert cfg.d_ff == s["ff"]
+        assert spec0.mixer == "rwkv6"
+    else:
+        assert cfg.d_ff == s["ff"]
+        if spec0.mixer == "attn":
+            assert spec0.attn.n_heads == s["H"]
+            assert spec0.attn.n_kv_heads == s["kv"]
+
+
+def test_gemma3_pattern_5to1():
+    cfg = get_config("gemma3-4b")
+    pat = cfg.stages[0].pattern
+    windows = [sp.attn.window for sp in pat]
+    assert windows[:5] == [1024] * 5 and windows[5] is None
+    assert cfg.n_layers == 34
+
+
+def test_recurrentgemma_pattern_2to1():
+    cfg = get_config("recurrentgemma-9b")
+    pat = cfg.stages[0].pattern
+    assert [sp.mixer for sp in pat] == ["rglru", "rglru", "attn"]
+    assert cfg.n_layers == 38
+
+
+def test_deepseek_first_layer_dense():
+    cfg = get_config("deepseek-v2-236b")
+    assert cfg.stages[0].pattern[0].ffn == "swiglu"
+    assert cfg.stages[0].repeat == 1
+    assert cfg.stages[1].repeat == 59
+
+
+def test_whisper_encoder_decoder():
+    cfg = get_config("whisper-base")
+    assert cfg.encoder is not None and cfg.encoder.n_layers == 6
+    assert cfg.stages[0].pattern[0].cross_attn
+    assert not cfg.encoder.layer.attn.causal
+
+
+def test_shape_skip_rules():
+    long = SHAPES["long_500k"]
+    for arch, expect in [("mixtral-8x22b", True), ("rwkv6-3b", True),
+                         ("gemma3-4b", True), ("recurrentgemma-9b", True),
+                         ("h2o-danube-3-4b", True),
+                         ("yi-34b", False), ("yi-9b", False),
+                         ("deepseek-v2-236b", False),
+                         ("whisper-base", False), ("paligemma-3b", False)]:
+        ok, why = shape_supported(get_config(arch), long)
+        assert ok == expect, (arch, why)
+    # fnet is encoder-only: no decode shapes at all
+    ok, _ = shape_supported(get_config("fnet-350m"), SHAPES["decode_32k"])
+    assert not ok
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].lowers_serve_step
+
+
+def test_croft_configs():
+    assert croft_128().grid == (128,) * 3
+    c = paper_option(croft_1024(), 4)
+    assert c.opts.overlap_k == 2 and c.opts.plan_cache
+    c1 = paper_option(croft_1024(), 1)
+    assert c1.opts.overlap_k == 1 and not c1.opts.plan_cache

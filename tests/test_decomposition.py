@@ -1,0 +1,73 @@
+"""Decomposition descriptors: the paper's scaling limits and shape math."""
+
+import numpy as np
+import pytest
+
+from repro.core.decomposition import Decomposition, pencil_grid_for
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the pure shape math."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_slab_scaling_wall():
+    """Paper §2.2.1/§3.1: slab P_max = Nz — the FFTW3 wall of table 1."""
+    d = Decomposition("slab", ("z",))
+    mesh = FakeMesh(z=256)
+    with pytest.raises(ValueError, match="slab decomposition limited"):
+        d.validate((128, 128, 128), mesh)
+
+
+def test_pencil_scaling():
+    """Pencil P_max = Ny*Nz (paper §2.2.2): 256 procs on a 128^3 grid is
+    fine where slab fails."""
+    d = Decomposition("pencil", ("y", "z"))
+    mesh = FakeMesh(y=16, z=16)
+    d.validate((128, 128, 128), mesh, overlap_k=2)
+    assert d.local_shape((128, 128, 128), mesh) == (128, 8, 8)
+
+
+def test_pencil_divisibility_errors():
+    d = Decomposition("pencil", ("y", "z"))
+    with pytest.raises(ValueError, match="not divisible"):
+        d.validate((128, 100, 128), FakeMesh(y=16, z=16))
+
+
+def test_cell_local_shape():
+    d = Decomposition("cell", ("x", "y", "z"))
+    mesh = FakeMesh(x=2, y=2, z=2)
+    assert d.local_shape((64, 64, 64), mesh) == (32, 32, 32)
+
+
+def test_folded_axis_sizes():
+    d = Decomposition("pencil", (("pod", "data"), "model"))
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    assert d.axis_sizes(mesh) == (32, 16)
+    assert d.n_procs(mesh) == 512
+
+
+def test_partition_specs():
+    d = Decomposition("pencil", ("y", "z"))
+    assert tuple(d.partition_spec()) == (None, "y", "z")
+    assert tuple(d.spectral_spec()) == ("y", "z", None)
+    s = Decomposition("slab", ("z",))
+    assert tuple(s.partition_spec()) == (None, None, "z")
+
+
+def test_kind_validation():
+    with pytest.raises(ValueError):
+        Decomposition("pencil", ("y",))
+    with pytest.raises(ValueError):
+        Decomposition("blob", ("y",))
+
+
+def test_pencil_grid_for():
+    py, pz = pencil_grid_for(256, 1024, 1024)
+    assert py * pz == 256 and 1024 % py == 0 and 1024 % pz == 0
+    assert py == pz == 16  # near-square preferred (paper fig. 5)
+    py, pz = pencil_grid_for(8, 128, 128)
+    assert py * pz == 8
+    with pytest.raises(ValueError):
+        pencil_grid_for(7, 16, 16)  # 7 doesn't divide any pow-2 grid

@@ -1,0 +1,85 @@
+"""Property-based tests of FFT invariants (hypothesis).
+
+Linearity, Parseval energy conservation, the shift <-> phase-ramp theorem,
+impulse -> constant spectrum, and forward/backward inversion — checked on
+the matmul four-step implementation (the one the distributed pipeline
+uses), sizes drawn from the power-of-two domain the paper restricts to.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import local_fft as lf
+
+sizes = st.sampled_from([4, 8, 16, 64, 128, 256])
+batches = st.integers(min_value=1, max_value=4)
+seeds = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+
+def _rand(seed, b, n):
+    r = np.random.RandomState(seed)
+    return (r.randn(b, n) + 1j * r.randn(b, n)).astype(np.complex64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, batches, sizes)
+def test_linearity(seed, b, n):
+    x = _rand(seed, b, n)
+    y = _rand(seed + 1, b, n)
+    a = 0.7 - 0.2j
+    lhs = np.asarray(lf.fft_matmul(jnp.asarray(a * x + y)))
+    rhs = a * np.asarray(lf.fft_matmul(jnp.asarray(x))) \
+        + np.asarray(lf.fft_matmul(jnp.asarray(y)))
+    np.testing.assert_allclose(lhs, rhs, atol=3e-3 * max(1, np.abs(rhs).max()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, sizes)
+def test_parseval(seed, n):
+    x = _rand(seed, 2, n)
+    y = np.asarray(lf.fft_matmul(jnp.asarray(x)))
+    e_time = np.sum(np.abs(x) ** 2, axis=-1)
+    e_freq = np.sum(np.abs(y) ** 2, axis=-1) / n
+    np.testing.assert_allclose(e_time, e_freq, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, sizes, st.integers(min_value=0, max_value=63))
+def test_shift_theorem(seed, n, shift):
+    shift = shift % n
+    x = _rand(seed, 1, n)
+    y = np.asarray(lf.fft_matmul(jnp.asarray(np.roll(x, shift, axis=-1))))
+    k = np.arange(n)
+    ramp = np.exp(-2j * np.pi * k * shift / n)
+    y0 = np.asarray(lf.fft_matmul(jnp.asarray(x))) * ramp
+    np.testing.assert_allclose(y, y0, atol=3e-3 * max(1, np.abs(y0).max()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(sizes)
+def test_impulse_spectrum(n):
+    x = np.zeros((1, n), np.complex64)
+    x[0, 0] = 1.0
+    y = np.asarray(lf.fft_matmul(jnp.asarray(x)))
+    np.testing.assert_allclose(y, np.ones((1, n)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seeds, batches, sizes)
+def test_forward_backward_inversion(seed, b, n):
+    x = _rand(seed, b, n)
+    y = lf.fft_matmul(jnp.asarray(x), -1)
+    xb = np.asarray(lf.fft_matmul(y, +1)) / n
+    np.testing.assert_allclose(xb, x, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seeds, sizes)
+def test_real_input_hermitian_symmetry(seed, n):
+    r = np.random.RandomState(seed)
+    x = r.randn(1, n).astype(np.float32).astype(np.complex64)
+    y = np.asarray(lf.fft_matmul(jnp.asarray(x)))[0]
+    # Y[k] == conj(Y[-k mod n])
+    mirrored = np.conj(np.roll(y[::-1], 1))
+    np.testing.assert_allclose(y, mirrored, atol=3e-3 * max(1, np.abs(y).max()))

@@ -1,0 +1,72 @@
+"""Local FFT implementations vs numpy and the naive O(N^2) DFT."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import local_fft as lf
+from repro.core import plan as plan_lib
+from repro.kernels.ref import ref_fft_1d_naive
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 128, 512, 4096, 16384])
+@pytest.mark.parametrize("impl", ["matmul", "stockham"])
+def test_fft_1d_matches_numpy(n, impl, rng):
+    x = (rng.randn(3, n) + 1j * rng.randn(3, n)).astype(np.complex64)
+    fn = lf.fft_matmul if impl == "matmul" else lf.fft_stockham
+    y = np.asarray(fn(jnp.asarray(x)))
+    ref = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=2e-4 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [8, 32])
+def test_fft_matches_naive_dft(n, rng):
+    """Independent of any library FFT."""
+    x = (rng.randn(2, n) + 1j * rng.randn(2, n)).astype(np.complex64)
+    y = np.asarray(lf.fft_matmul(jnp.asarray(x)))
+    ref = ref_fft_1d_naive(x)
+    np.testing.assert_allclose(y, ref, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [64, 1024])
+def test_inverse_roundtrip(n, rng):
+    x = (rng.randn(2, n) + 1j * rng.randn(2, n)).astype(np.complex64)
+    y = lf.fft_matmul(jnp.asarray(x), -1)
+    xb = np.asarray(lf.fft_matmul(y, +1)) / n
+    np.testing.assert_allclose(xb, x, atol=1e-4)
+
+
+def test_plan_cache_and_rematerialized_agree(rng):
+    x = (rng.randn(2, 256) + 1j * rng.randn(2, 256)).astype(np.complex64)
+    a = np.asarray(lf.fft_matmul(jnp.asarray(x), plan_cache=True))
+    b = np.asarray(lf.fft_matmul(jnp.asarray(x), plan_cache=False))
+    np.testing.assert_allclose(a, b, atol=2e-3)
+
+
+def test_plan_factorization():
+    for n in [2, 64, 128, 4096, 1 << 16, 1 << 19]:
+        p = plan_lib.make_plan(n)
+        assert p.n1 * p.n2 == n
+        assert p.n1 <= plan_lib.MAX_RADIX
+    with pytest.raises(ValueError):
+        plan_lib.split_factors(100)  # not a power of two
+
+
+def test_fft3d_local(rng):
+    x = (rng.randn(8, 16, 32) + 1j * rng.randn(8, 16, 32)).astype(np.complex64)
+    y = np.asarray(lf.fft3d_local(jnp.asarray(x)))
+    ref = np.fft.fftn(x)
+    np.testing.assert_allclose(y, ref, atol=2e-4 * np.abs(ref).max())
+    # paper eq. (2): backward(forward(x)) == x with 1/(NxNyNz)
+    xb = np.asarray(lf.fft3d_local(jnp.asarray(y), sign=+1, norm="backward"))
+    np.testing.assert_allclose(xb, x, atol=2e-4 * np.abs(x).max())
+
+
+def test_rfft3d_local(rng):
+    from repro.core.rfft import rfft3d, irfft3d
+    x = rng.randn(8, 4, 16).astype(np.float32)
+    y = np.asarray(rfft3d(jnp.asarray(x)))
+    ref = np.fft.rfftn(x)
+    np.testing.assert_allclose(y, ref, atol=2e-4 * np.abs(ref).max())
+    xb = np.asarray(irfft3d(jnp.asarray(y), 16))
+    np.testing.assert_allclose(xb, x, atol=2e-4)

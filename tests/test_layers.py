@@ -1,0 +1,279 @@
+"""Layer-level unit tests: norms, rope, attention core, MoE, recurrences."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import layers as L
+from repro.models.attention import (MaskSpec, blockwise_attention, gqa_fwd,
+                                    init_gqa, init_mla, mla_fwd)
+from repro.models.config import AttentionSpec, MoESpec, RecurrentSpec
+from repro.models.moe import init_moe, moe_fwd, aux_load_balance_loss
+from repro.models.recurrent import (matrix_recurrence, vector_recurrence,
+                                    rglru_fwd, rwkv6_fwd, init_rglru,
+                                    init_rwkv6, rglru_init_state,
+                                    rwkv6_init_state, RGLRUState, RWKVState)
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+def test_rmsnorm(rng):
+    p = L.init_norm("rmsnorm", 16)
+    x = jnp.asarray(rng.randn(2, 3, 16).astype(np.float32))
+    y = np.asarray(L.norm_fwd(p, x, "rmsnorm"))
+    expected = x / np.sqrt(np.mean(np.asarray(x) ** 2, -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(y, expected, rtol=1e-4)
+
+
+def test_layernorm_zero_mean(rng):
+    p = L.init_norm("layernorm", 16)
+    x = jnp.asarray(rng.randn(2, 3, 16).astype(np.float32) * 5 + 3)
+    y = np.asarray(L.norm_fwd(p, x, "layernorm"))
+    np.testing.assert_allclose(y.mean(-1), 0, atol=1e-5)
+    np.testing.assert_allclose(y.std(-1), 1, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_positions(rng):
+    x = jnp.asarray(rng.randn(1, 8, 2, 16).astype(np.float32))
+    pos = jnp.arange(8)
+    cos, sin = L.rope_angles(pos, 16, 10_000.0)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.randn(1, 1, 1, 16).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 1, 1, 16).astype(np.float32))
+    def dot_at(i, j):
+        ci, si = L.rope_angles(jnp.asarray([i]), 16, 10_000.0)
+        cj, sj = L.rope_angles(jnp.asarray([j]), 16, 10_000.0)
+        return float(jnp.sum(L.apply_rope(q, ci, si) * L.apply_rope(k, cj, sj)))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+# --------------------------------------------------------------------------
+# attention core
+# --------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, mask):
+    s = np.einsum("bqhd,bkhd->bhqk", q, k)
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("kv_block", [4, 8, 32])
+def test_blockwise_matches_naive_causal(kv_block, rng):
+    b, s, h, d = 2, 32, 4, 8
+    q = rng.randn(b, s, h, d).astype(np.float32)
+    k = rng.randn(b, s, h, d).astype(np.float32)
+    v = rng.randn(b, s, h, d).astype(np.float32)
+    pos = jnp.arange(s)
+    out = np.asarray(blockwise_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        MaskSpec(causal=True), pos, pos, kv_block=kv_block))
+    mask = np.tril(np.ones((s, s), bool))
+    ref = _naive_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_blockwise_gqa_grouping(rng):
+    """4 query heads sharing 2 kv heads == explicit repeat."""
+    b, s, h, kvh, d = 1, 16, 4, 2, 8
+    q = rng.randn(b, s, h, d).astype(np.float32)
+    k = rng.randn(b, s, kvh, d).astype(np.float32)
+    v = rng.randn(b, s, kvh, d).astype(np.float32)
+    pos = jnp.arange(s)
+    out = np.asarray(blockwise_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        MaskSpec(causal=True), pos, pos, kv_block=8))
+    k_rep = np.repeat(k, h // kvh, axis=2)
+    v_rep = np.repeat(v, h // kvh, axis=2)
+    # blockwise groups q as (kv, g): q head order is kv-major
+    qg = q.reshape(b, s, kvh, h // kvh, d).reshape(b, s, h, d)
+    ref = _naive_attention(qg, k_rep, v_rep, np.tril(np.ones((s, s), bool)))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_sliding_window_mask(rng):
+    b, s, h, d = 1, 32, 2, 8
+    q = rng.randn(b, s, h, d).astype(np.float32)
+    k = rng.randn(b, s, h, d).astype(np.float32)
+    v = rng.randn(b, s, h, d).astype(np.float32)
+    pos = jnp.arange(s)
+    w = 8
+    out = np.asarray(blockwise_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        MaskSpec(causal=True, window=w), pos, pos, kv_block=8))
+    qi, ki = np.arange(s)[:, None], np.arange(s)[None, :]
+    mask = (ki <= qi) & (qi - ki < w)
+    ref = _naive_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_prefix_lm_mask(rng):
+    b, s, h, d = 1, 16, 2, 8
+    q = rng.randn(b, s, h, d).astype(np.float32)
+    k = rng.randn(b, s, h, d).astype(np.float32)
+    v = rng.randn(b, s, h, d).astype(np.float32)
+    pos = jnp.arange(s)
+    out = np.asarray(blockwise_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        MaskSpec(causal=True, prefix_len=6), pos, pos, kv_block=8))
+    qi, ki = np.arange(s)[:, None], np.arange(s)[None, :]
+    mask = (ki <= qi) | (ki < 6)
+    ref = _naive_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_empty_slots_masked(rng):
+    """pos == -1 (empty ring-cache slots) must contribute nothing."""
+    b, s, h, d = 1, 4, 2, 8
+    q = rng.randn(b, 1, h, d).astype(np.float32)
+    k = rng.randn(b, s, h, d).astype(np.float32)
+    v = rng.randn(b, s, h, d).astype(np.float32)
+    k_pos = jnp.asarray([0, 1, -1, -1])
+    out = np.asarray(blockwise_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        MaskSpec(causal=True), jnp.asarray([5]), k_pos, kv_block=4))
+    ref = _naive_attention(q, k[:, :2], v[:, :2], np.ones((1, 2), bool))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_mla_shapes(rng):
+    a = AttentionSpec(kind="mla", n_heads=4, n_kv_heads=4, head_dim=24,
+                      q_lora_rank=16, kv_lora_rank=8, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16)
+    p = init_mla(jax.random.PRNGKey(0), 32, a)
+    x = jnp.asarray(rng.randn(2, 8, 32).astype(np.float32))
+    y, latent = mla_fwd(p, x, a, MaskSpec(causal=True), jnp.arange(8))
+    assert y.shape == (2, 8, 32)
+    assert latent.shape == (2, 8, 8 + 8)  # kv_lora + rope
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+def test_moe_no_drop_equals_dense_reference(rng):
+    d, e, k = 16, 4, 2
+    m = MoESpec(n_experts=e, top_k=k, d_ff_expert=32, capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), d, m)
+    x = jnp.asarray(rng.randn(2, 8, d).astype(np.float32))
+    y = np.asarray(moe_fwd(p, x, m))
+    # dense reference: run every expert on every token, weight by gates
+    xt = np.asarray(x).reshape(-1, d)
+    logits = xt @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    top = np.argsort(-probs, -1)[:, :k]
+    ref = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        gs = probs[t, top[t]]
+        gs = gs / gs.sum()
+        for j, eid in enumerate(top[t]):
+            g = np.asarray(jax.nn.silu(xt[t] @ np.asarray(p["w_gate"][eid])))
+            u = xt[t] @ np.asarray(p["w_up"][eid])
+            ref[t] += gs[j] * (g * u) @ np.asarray(p["w_down"][eid])
+    np.testing.assert_allclose(y.reshape(-1, d), ref, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    d, e = 8, 2
+    m = MoESpec(n_experts=e, top_k=1, d_ff_expert=16, capacity_factor=0.1)
+    p = init_moe(jax.random.PRNGKey(1), d, m)
+    x = jnp.asarray(rng.randn(4, 64, d).astype(np.float32))
+    y = np.asarray(moe_fwd(p, x, m))
+    # capacity 0.1 -> most tokens dropped -> many exactly-zero outputs
+    zero_rows = np.sum(np.all(y.reshape(-1, d) == 0, axis=-1))
+    assert zero_rows > 100
+
+
+def test_moe_aux_loss(rng):
+    d, e = 8, 4
+    m = MoESpec(n_experts=e, top_k=2, d_ff_expert=16)
+    p = init_moe(jax.random.PRNGKey(2), d, m)
+    x = jnp.asarray(rng.randn(2, 32, d).astype(np.float32))
+    aux = float(aux_load_balance_loss(p, x, m))
+    assert 0.5 < aux < 4.0  # ~1 at balance
+
+
+# --------------------------------------------------------------------------
+# recurrences (vs naive loops)
+# --------------------------------------------------------------------------
+
+def test_vector_recurrence_vs_loop(rng):
+    B, T, D = 2, 37, 5
+    log_a = -np.abs(rng.randn(B, T, D)).astype(np.float32) * 0.3
+    b = rng.randn(B, T, D).astype(np.float32)
+    h0 = rng.randn(B, D).astype(np.float32)
+    h, hl = vector_recurrence(jnp.asarray(log_a), jnp.asarray(b),
+                              jnp.asarray(h0), chunk=8)
+    href = np.zeros((B, T, D), np.float32)
+    hp = h0.copy()
+    for t in range(T):
+        hp = np.exp(log_a[:, t]) * hp + b[:, t]
+        href[:, t] = hp
+    np.testing.assert_allclose(np.asarray(h), href, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hl), hp, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 6, 24])
+def test_matrix_recurrence_vs_loop(chunk, rng):
+    B, T, H, K, V = 2, 24, 3, 4, 4
+    log_w = -np.abs(rng.randn(B, T, H, K)).astype(np.float32) * 0.5
+    k = rng.randn(B, T, H, K).astype(np.float32)
+    v = rng.randn(B, T, H, V).astype(np.float32)
+    r = rng.randn(B, T, H, K).astype(np.float32)
+    u = rng.randn(H, K).astype(np.float32)
+    s0 = rng.randn(B, H, K, V).astype(np.float32)
+    o, sl = matrix_recurrence(*map(jnp.asarray, (log_w, k, v, r)),
+                              jnp.asarray(u), jnp.asarray(s0), chunk=chunk)
+    oref = np.zeros((B, T, H, V), np.float32)
+    s = s0.copy()
+    for t in range(T):
+        a = np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        oref[:, t] = np.einsum("bhk,bhkv->bhv", r[:, t],
+                               s + u[None, :, :, None] * a)
+        s = np.exp(log_w[:, t])[..., None] * s + a
+    np.testing.assert_allclose(np.asarray(o), oref, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sl), s, atol=2e-5)
+
+
+def test_rglru_decode_matches_prefill(rng):
+    """Step-by-step decode == one prefill pass over the same tokens."""
+    d = 16
+    spec = RecurrentSpec(kind="rglru", d_state=d, conv_width=4, chunk=4)
+    p = init_rglru(jax.random.PRNGKey(0), d, spec)
+    x = jnp.asarray(rng.randn(2, 12, d).astype(np.float32))
+    y_all, st_all = rglru_fwd(p, x, spec, rglru_init_state(2, d, 4, jnp.float32))
+    st = rglru_init_state(2, d, 4, jnp.float32)
+    ys = []
+    for t in range(12):
+        y, st = rglru_fwd(p, x[:, t:t+1], spec, st)
+        ys.append(np.asarray(y))
+    np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_all),
+                               atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_all.h),
+                               atol=3e-5)
+
+
+def test_rwkv6_decode_matches_prefill(rng):
+    d = 16
+    spec = RecurrentSpec(kind="rwkv6", n_heads=2, chunk=4)
+    p = init_rwkv6(jax.random.PRNGKey(0), d, spec)
+    x = jnp.asarray(rng.randn(1, 8, d).astype(np.float32))
+    y_all, st_all = rwkv6_fwd(p, x, spec, rwkv6_init_state(1, d, 2, jnp.float32))
+    st = rwkv6_init_state(1, d, 2, jnp.float32)
+    ys = []
+    for t in range(8):
+        y, st = rwkv6_fwd(p, x[:, t:t+1], spec, st)
+        ys.append(np.asarray(y))
+    np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_all),
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st.s), np.asarray(st_all.s),
+                               atol=3e-4)

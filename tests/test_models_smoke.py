@@ -1,0 +1,146 @@
+"""Per-arch reduced-config smoke tests: one forward + one train step on CPU,
+asserting output shapes and finiteness (assignment requirement), plus
+prefill/decode agreement with the teacher-forced pass.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config
+from repro.models import encode, forward, init_caches, init_params
+from repro.models.config import Stage
+
+
+def _inputs(cfg, key, B, S):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    kwargs = {}
+    if cfg.encoder is not None:
+        frames = jax.random.normal(key, (B, cfg.n_frontend_tokens, cfg.d_model))
+        kwargs["frames"] = frames
+    elif cfg.frontend == "vision":
+        kwargs["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    B, S = 2, 32
+    tokens, kwargs = _inputs(cfg, key, B, S)
+    fwd_kwargs = {}
+    if "frames" in kwargs:
+        fwd_kwargs["enc_out"] = encode(params, cfg, kwargs["frames"])
+    elif "prefix_embeds" in kwargs:
+        fwd_kwargs["prefix_embeds"] = kwargs["prefix_embeds"]
+    logits, _ = forward(params, cfg, tokens, mode="train", kv_block=16,
+                        **fwd_kwargs)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "mixtral-8x22b", "rwkv6-3b"])
+def test_train_step_reduces_loss(arch):
+    from repro.train import OptConfig, init_train_state, make_train_step
+    from repro.train.data import SyntheticDataset
+    cfg = get_config(arch, smoke=True)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, decay_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg, mesh=None)
+    step_fn = make_train_step(cfg, opt_cfg, None, 4, kv_block=32,
+                              n_loss_chunks=4)
+    ds = SyntheticDataset(cfg.vocab, 64, 4)
+    losses = []
+    for _, batch in zip(range(3), ds):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+def _high_capacity(cfg):
+    """Crank MoE capacity so drops don't break decode-vs-teacher equality."""
+    stages = []
+    for st in cfg.stages:
+        pat = tuple(
+            dataclasses.replace(sp, moe=dataclasses.replace(
+                sp.moe, capacity_factor=16.0)) if sp.moe else sp
+            for sp in st.pattern)
+        stages.append(Stage(pat, st.repeat))
+    return dataclasses.replace(cfg, stages=tuple(stages))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-236b", "gemma3-4b",
+                                  "recurrentgemma-9b", "rwkv6-3b",
+                                  "whisper-base", "paligemma-3b",
+                                  "mixtral-8x22b", "h2o-danube-3-4b",
+                                  "yi-34b"])
+def test_prefill_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(_high_capacity(cfg), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    B, S = 2, 24
+    tokens, kwargs = _inputs(cfg, key, B, S + 1)
+    fwd_kwargs = {}
+    enc_len = 0
+    if "frames" in kwargs:
+        fwd_kwargs["enc_out"] = encode(params, cfg, kwargs["frames"])
+        enc_len = cfg.n_frontend_tokens
+    elif "prefix_embeds" in kwargs:
+        fwd_kwargs["prefix_embeds"] = kwargs["prefix_embeds"]
+    ref, _ = forward(params, cfg, tokens, mode="train", kv_block=16,
+                     **fwd_kwargs)
+    caches = init_caches(cfg, B, max_len=64, enc_len=enc_len,
+                         dtype=jnp.float32)
+    pre, caches = forward(params, cfg, tokens[:, :S], mode="prefill",
+                          caches=caches, kv_block=16, **fwd_kwargs)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(ref[:, :S]),
+                               rtol=0, atol=2e-4 * np.abs(np.asarray(ref)).max())
+    dec_kwargs = {k: v for k, v in fwd_kwargs.items() if k != "prefix_embeds"}
+    start = S + (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    dec, _ = forward(params, cfg, tokens[:, S:S + 1], mode="decode",
+                     caches=caches, start=start, kv_block=16, **dec_kwargs)
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(ref[:, S]),
+        rtol=0, atol=2e-4 * np.abs(np.asarray(ref)).max())
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Decode past the window: ring cache must equal a fresh full pass."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True)  # window 32 smoke
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 48  # past the 32-token window
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                                cfg.vocab)
+    ref, _ = forward(params, cfg, tokens, mode="train", kv_block=16)
+    caches = init_caches(cfg, B, max_len=64, dtype=jnp.float32)
+    _, caches = forward(params, cfg, tokens[:, :S], mode="prefill",
+                        caches=caches, kv_block=16)
+    dec, _ = forward(params, cfg, tokens[:, S:S + 1], mode="decode",
+                     caches=caches, start=S, kv_block=16)
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(ref[:, S]),
+        atol=2e-4 * np.abs(np.asarray(ref)).max())
+
+
+def test_param_counts_match_public():
+    expected = {
+        "mixtral-8x22b": (141e9, 0.02), "deepseek-v2-236b": (236e9, 0.02),
+        "yi-34b": (34.4e9, 0.02), "yi-9b": (8.8e9, 0.02),
+        "rwkv6-3b": (3.1e9, 0.05), "h2o-danube-3-4b": (4.0e9, 0.05),
+    }
+    for arch, (target, tol) in expected.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n)
+
+
+def test_active_params_moe():
+    assert get_config("mixtral-8x22b").active_param_count() < 45e9
+    assert get_config("deepseek-v2-236b").active_param_count() < 25e9
