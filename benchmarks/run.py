@@ -3,18 +3,33 @@
 ``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,derived``
 CSV rows (derived=0: measured on this host; 1: modeled from compiled
 artifacts / roofline constants — no TPU in this container).
+
+``--smoke`` runs only a fast autotuner sweep (``benchmarks.tuning_bench``)
+— the CI path exercising the planner end to end on every push.
 """
 
+import argparse
 import sys
 import traceback
 
+FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
+                "benchmarks.kernel_micro", "benchmarks.lm_roofline",
+                "benchmarks.train_bench", "benchmarks.tuning_bench"]
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast tuner-only sweep (CI)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     failures = []
-    for modname in ["benchmarks.fft_tables", "benchmarks.collective_profile",
-                    "benchmarks.kernel_micro", "benchmarks.lm_roofline",
-                    "benchmarks.train_bench"]:
+    if args.smoke:
+        from benchmarks import tuning_bench
+        tuning_bench.run(smoke=True)
+        return
+    for modname in FULL_MODULES:
         try:
             mod = __import__(modname, fromlist=["run"])
             mod.run()

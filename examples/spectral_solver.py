@@ -5,10 +5,14 @@ steps of 3-D viscous Burgers — the HPC workload class the paper targets
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/spectral_solver.py --devices 8
 
-Uses the beyond-paper ``spectral`` output layout: forward stays in z-pencil
-layout, the frequency-domain multiply runs on the sharded spectrum, and the
-inverse consumes it directly — the two restoring transposes the paper's
-natural layout pays per round trip are skipped entirely.
+The FFT plan comes from the autotuner (``repro.tuning``): ``--tune
+measure`` (default) races the model-ranked top candidates on the mesh,
+``--tune model`` picks analytically with zero execution, and ``--tune
+wisdom`` reuses a plan stored by a previous run (``--wisdom PATH``).  The
+planner routinely lands on the beyond-paper ``spectral`` output layout:
+the forward stays in z-pencil layout, the frequency-domain multiply runs
+on the sharded spectrum, and the inverse consumes it directly, skipping
+the restoring transposes the natural layout pays per round trip.
 """
 
 import argparse
@@ -19,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Croft3D, Decomposition, FFTOptions, poisson_solve
+from repro.core import Croft3D, FFTOptions, poisson_solve
 
 
 def wavenumbers(n):
@@ -32,17 +36,24 @@ def main():
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--nu", type=float, default=0.05)
+    ap.add_argument("--tune", default="measure",
+                    choices=["model", "measure", "wisdom"],
+                    help="autotuner mode (repro.tuning)")
+    ap.add_argument("--wisdom", default=None,
+                    help="wisdom JSON path for --tune wisdom / persistence")
     args = ap.parse_args()
 
     n = args.n
     if args.devices > 1:
         mesh = jax.make_mesh((2, args.devices // 2), ("y", "z"),
                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        decomp = Decomposition("pencil", ("y", "z"))
+        plan = Croft3D.tuned((n, n, n), mesh, mode=args.tune,
+                             wisdom_path=args.wisdom)
+        print("tuned plan:", plan.tune_result.summary())
     else:
-        mesh = decomp = None
-    plan = Croft3D((n, n, n), mesh, decomp,
-                   FFTOptions(output_layout="spectral"))
+        mesh = None
+        plan = Croft3D((n, n, n), None, None,
+                       FFTOptions(output_layout="spectral"))
 
     # --- Poisson: manufactured solution ------------------------------------
     g = 2 * math.pi * np.arange(n) / n

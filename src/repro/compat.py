@@ -1,0 +1,135 @@
+"""Version-compatibility shims for JAX APIs that moved between releases.
+
+The repo is written against the newer public surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); this
+module makes it run on jax 0.4.x where those live elsewhere or do not
+exist yet:
+
+  * ``shard_map``  — ``jax.shard_map`` (>= 0.6) falling back to
+    ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  * ``make_mesh``  — drops the ``axis_types=`` kwarg on versions whose
+    ``jax.make_mesh`` does not accept it (axis types default to Auto
+    there, which is what every call site passes anyway).
+  * ``AxisType``   — a sentinel enum standing in for
+    ``jax.sharding.AxisType`` so ``axis_types=(AxisType.Auto,) * n``
+    spellings keep working.
+
+``install()`` (run on import of the ``repro`` package) additionally
+patches the missing names onto ``jax`` itself, so test snippets and
+examples written against the new API run unmodified on old jax.
+
+NOTE: besides pure name aliases, ``install()`` flips
+``jax_threefry_partitionable`` to True on versions where it defaults to
+False.  This matches newer jax's default and is required for sharded
+and single-device code to draw identical ``jax.random`` streams (which
+this repo's parity tests and the tuner's measured comparisons rely on)
+— but it does change RNG output of *other* code in the same process
+relative to old-jax defaults.  Set it back after import if you need
+the legacy streams.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+try:  # jax >= 0.6: public name
+    from jax import shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+class _AxisTypeShim(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeShim)
+
+_RAW_MAKE_MESH = jax.make_mesh
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(_RAW_MAKE_MESH).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` accepting (and, on old jax, ignoring) axis_types."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return _RAW_MAKE_MESH(axis_shapes, axis_names, **kw)
+
+
+# raw targets resolved once, before install() patches our own shims in
+_RAW_AXIS_SIZE = getattr(jax.lax, "axis_size", None)
+_RAW_PCAST = getattr(jax.lax, "pcast", None)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (>= 0.5); on older jax, ``psum(1, axis)``
+    constant-folds to the same Python int inside shard_map bodies."""
+    if _RAW_AXIS_SIZE is not None:
+        return _RAW_AXIS_SIZE(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pcast(x, axes, *, to):
+    """``jax.lax.pcast`` (the >= 0.6 varying-manual-axes cast).
+
+    Old shard_map has no per-value varying-axes typing, so casting a
+    replicated value to "varying" is a no-op there.
+    """
+    if _RAW_PCAST is not None:
+        return _RAW_PCAST(x, axes, to=to)
+    return x
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` (>= 0.6) context manager.
+
+    On old jax a ``Mesh`` is itself a context manager entering the same
+    global-mesh env, so the shim just hands the mesh back.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None and fn is not set_mesh:
+        return fn(mesh)
+    return mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    jax 0.4.x returns a single-element list of property dicts; newer jax
+    returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def install() -> None:
+    """Idempotently patch moved/renamed names onto ``jax``."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _MAKE_MESH_HAS_AXIS_TYPES:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = axis_size
+    if not hasattr(jax.lax, "pcast"):
+        jax.lax.pcast = pcast
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    # newer jax defaults this to True; without it, sharded and unsharded
+    # jax.random draws diverge (breaks sharded-vs-single-device parity)
+    if not jax.config.jax_threefry_partitionable:
+        jax.config.update("jax_threefry_partitionable", True)
+
+
+install()

@@ -35,8 +35,26 @@ class Croft3D:
     decomp: Optional[Decomposition] = None
     opts: FFTOptions = dataclasses.field(default_factory=FFTOptions)
     dtype: jnp.dtype = jnp.complex64
+    #: autotune mode ("wisdom" | "model" | "measure"); when set, the
+    #: planner overrides ``decomp``/``opts`` (see ``repro.tuning``)
+    tune: Optional[str] = None
+    wisdom_path: Optional[str] = None
+    #: extra keyword arguments for ``tuning.tune`` (top_k, measure_iters, ...)
+    tune_kw: Optional[dict] = None
+    tune_result = None  # TuneResult when the planner picked the plan
 
     def __post_init__(self):
+        if self.tune is not None and self.mesh is None:
+            raise ValueError("tune= needs a mesh (single-device plans have "
+                             "nothing to tune)")
+        if self.tune is not None:
+            from repro import tuning
+            result = tuning.tune(self.shape, self.mesh, mode=self.tune,
+                                 dtype=self.dtype,
+                                 wisdom_path=self.wisdom_path,
+                                 **(self.tune_kw or {}))
+            self.decomp, self.opts = result.decomp, result.opts
+            self.tune_result = result
         if self.mesh is not None:
             if self.decomp is None:
                 raise ValueError("a mesh requires a Decomposition")
@@ -70,6 +88,23 @@ class Croft3D:
 
     def inverse(self, y: jax.Array) -> jax.Array:
         return self._inv(y)
+
+    # -- autotuning ----------------------------------------------------------
+    @classmethod
+    def tuned(cls, shape, mesh: Mesh, *, mode: str = "model",
+              wisdom_path: Optional[str] = None, dtype=jnp.complex64,
+              **tune_kw) -> "Croft3D":
+        """Plan via the autotuner (``repro.tuning``) instead of hand-picked
+        (decomp, opts).
+
+        ``mode="model"`` is FFTW ESTIMATE (analytic, zero execution),
+        ``mode="measure"`` is PATIENT (times the top candidates on the
+        mesh), ``mode="wisdom"`` reuses a stored plan from
+        ``wisdom_path`` (or $CROFT_WISDOM).  The chosen plan's provenance
+        is on ``plan.tune_result``.
+        """
+        return cls(tuple(shape), mesh, dtype=jnp.dtype(dtype), tune=mode,
+                   wisdom_path=wisdom_path, tune_kw=tune_kw or None)
 
     # -- AOT artifacts for the dry-run / roofline ----------------------------
     def lower_forward(self):

@@ -12,10 +12,25 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshLike = Union[Mesh, Mapping[str, int]]
+
+
+def _mesh_axis_sizes(mesh: MeshLike) -> Mapping[str, int]:
+    """Axis-name -> size mapping from a Mesh or a plain mapping.
+
+    Accepting a mapping lets the tuning planner validate and score
+    candidate decompositions without constructing devices (zero-execution
+    ``mode="model"``).  Anything with a ``.shape`` name->size mapping
+    (a real Mesh, or the tests' fakes) counts as a mesh."""
+    shape = getattr(mesh, "shape", None)
+    if shape is not None:
+        return dict(shape)
+    return dict(mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,14 +55,16 @@ class Decomposition:
             raise ValueError(
                 f"{self.kind} needs {expect[self.kind]} mesh axes, got {self.axes}")
 
-    def axis_sizes(self, mesh: Mesh) -> tuple[int, ...]:
+    def axis_sizes(self, mesh: MeshLike) -> tuple[int, ...]:
+        sizes = _mesh_axis_sizes(mesh)
+
         def size(a):
             if isinstance(a, tuple):
-                return math.prod(mesh.shape[x] for x in a)
-            return mesh.shape[a]
+                return math.prod(sizes[x] for x in a)
+            return sizes[a]
         return tuple(size(a) for a in self.axes)
 
-    def n_procs(self, mesh: Mesh) -> int:
+    def n_procs(self, mesh: MeshLike) -> int:
         return math.prod(self.axis_sizes(mesh))
 
     def partition_spec(self) -> P:
@@ -70,7 +87,8 @@ class Decomposition:
             return P(self.axes[0], self.axes[1], None)
         return P(self.axes[0], self.axes[1], self.axes[2])
 
-    def validate(self, shape: Sequence[int], mesh: Mesh, overlap_k: int = 1) -> None:
+    def validate(self, shape: Sequence[int], mesh: MeshLike,
+                 overlap_k: int = 1) -> None:
         nx, ny, nz = shape[-3], shape[-2], shape[-1]
         sizes = self.axis_sizes(mesh)
         if self.kind == "slab":
@@ -104,7 +122,16 @@ class Decomposition:
         spec = self.partition_spec() if layout == "natural" else self.spectral_spec()
         return NamedSharding(mesh, spec)
 
-    def local_shape(self, shape: Sequence[int], mesh: Mesh) -> tuple[int, ...]:
+    def is_valid(self, shape: Sequence[int], mesh: MeshLike,
+                 overlap_k: int = 1) -> bool:
+        """Non-raising :meth:`validate` (used by the tuning planner)."""
+        try:
+            self.validate(shape, mesh, overlap_k)
+        except (ValueError, KeyError):
+            return False
+        return True
+
+    def local_shape(self, shape: Sequence[int], mesh: MeshLike) -> tuple[int, ...]:
         nx, ny, nz = shape[-3], shape[-2], shape[-1]
         sizes = self.axis_sizes(mesh)
         if self.kind == "slab":

@@ -31,8 +31,9 @@ from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import axis_size, shard_map
 
 from repro.core import local_fft
 from repro.core.decomposition import Decomposition
@@ -43,8 +44,8 @@ AxisName = Union[str, tuple]
 def _axis_size(axis: AxisName) -> int:
     """Size of a (possibly folded) mesh axis from inside shard_map."""
     if isinstance(axis, tuple):
-        return math.prod(jax.lax.axis_size(a) for a in axis)
-    return jax.lax.axis_size(axis)
+        return math.prod(axis_size(a) for a in axis)
+    return axis_size(axis)
 
 
 def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
@@ -63,7 +64,7 @@ def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
         raise ValueError(f"unknown transpose impl {impl!r}")
     if isinstance(axis, tuple):
         raise ValueError("pairwise transpose supports single mesh axes only")
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     n_split = blk.shape[split_axis] // p
     n_cat = blk.shape[concat_axis]
@@ -247,13 +248,15 @@ def _cell_body(blk: jax.Array, *, ax_x: AxisName, ax_y: AxisName,
 # ---------------------------------------------------------------------------
 
 def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
-                      sign: int = -1, opts: FFTOptions = FFTOptions(),
+                      sign: int = -1, opts: Optional[FFTOptions] = None,
                       norm: Optional[str] = None) -> jax.Array:
     """3-D FFT of a globally-sharded (..., Nx, Ny, Nz) array.
 
     Leading batch axes are carried along unsharded (the local block sees
     them; FFT/chunk axis indices below are offset accordingly).
     """
+    if opts is None:
+        opts = FFTOptions()
     if x.ndim != 3:
         raise ValueError("distributed_fft3d expects a rank-3 (Nx,Ny,Nz) array; "
                          "vmap for batches")
@@ -304,18 +307,22 @@ def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
     return fn(x)
 
 
-def fft3d(x, mesh=None, decomp=None, opts: FFTOptions = FFTOptions(),
+def fft3d(x, mesh=None, decomp=None, opts: Optional[FFTOptions] = None,
           norm: Optional[str] = None):
     """Forward 3-D FFT; single-device fallback when no mesh is given."""
+    if opts is None:
+        opts = FFTOptions()
     if mesh is None or math.prod(mesh.devices.shape) == 1:
         return local_fft.fft3d_local(x, -1, impl=opts.local_impl,
                                      plan_cache=opts.plan_cache, norm=norm)
     return distributed_fft3d(x, mesh, decomp, -1, opts, norm)
 
 
-def ifft3d(x, mesh=None, decomp=None, opts: FFTOptions = FFTOptions(),
+def ifft3d(x, mesh=None, decomp=None, opts: Optional[FFTOptions] = None,
            norm: Optional[str] = "backward"):
     """Inverse 3-D FFT (paper eq. 2: 1/(NxNyNz) normalization)."""
+    if opts is None:
+        opts = FFTOptions()
     if mesh is None or math.prod(mesh.devices.shape) == 1:
         return local_fft.fft3d_local(x, +1, impl=opts.local_impl,
                                      plan_cache=opts.plan_cache, norm=norm)

@@ -21,13 +21,15 @@ from repro.core.distributed import FFTOptions
 
 
 def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
-           opts: FFTOptions = FFTOptions()) -> jax.Array:
+           opts: Optional[FFTOptions] = None) -> jax.Array:
     """Real input (Nx, Ny, Nz) -> complex (Nx, Ny, Nz//2 + 1).
 
     Matches ``jnp.fft.rfftn`` with axes in (x, y, z) order (z contiguous,
     halved — the axis that stays local at the end of the pencil pipeline, so
     the truncation never crosses a shard boundary in spectral layout).
     """
+    if opts is None:
+        opts = FFTOptions()
     if jnp.iscomplexobj(x):
         raise ValueError("rfft3d expects a real array")
     nz = x.shape[-1]
@@ -45,12 +47,14 @@ def _negate_freq(a: jax.Array, axis: int) -> jax.Array:
 
 def irfft3d(y: jax.Array, nz: int, mesh=None,
             decomp: Optional[Decomposition] = None,
-            opts: FFTOptions = FFTOptions()) -> jax.Array:
+            opts: Optional[FFTOptions] = None) -> jax.Array:
     """Inverse of :func:`rfft3d`; reconstructs the Hermitian half.
 
     F[kx, ky, kz] = conj(F[-kx mod Nx, -ky mod Ny, nz - kz]) for the
     missing bins kz in [nz//2 + 1, nz - 1].
     """
+    if opts is None:
+        opts = FFTOptions()
     body = y[..., 1: (nz + 1) // 2]           # kz' = 1 .. ceil(nz/2)-1
     tail = jnp.conj(body)
     tail = _negate_freq(tail, -3)             # -kx mod Nx

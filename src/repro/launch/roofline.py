@@ -144,9 +144,10 @@ def terms_from_compiled(compiled, n_devices: int,
     models by O(depth).  The raw cost_analysis numbers ride along in the
     memory dict for cross-checking.
     """
+    from repro import compat
     from repro.launch import hlo_cost
 
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     cost = hlo_cost.analyze(hlo)
     ma = compiled.memory_analysis()

@@ -1,0 +1,47 @@
+"""repro.tuning — FFTW-style autotuning planner for the distributed 3-D FFT.
+
+CROFT's option study (§5.1) and its FFTW3 comparison are ultimately about
+*plan selection*: the same transform can be run with different
+decompositions (slab/pencil/cell), overlap depths (K), local 1-D kernels,
+output layouts, and transpose implementations, and the right combination
+depends on shape, mesh, dtype, and hardware.  This package chooses it,
+mapping directly onto FFTW's planner design:
+
+  FFTW concept          here
+  --------------------  ---------------------------------------------------
+  planner search space  ``candidates.enumerate_candidates`` — every valid
+                        (Decomposition, FFTOptions) pair for (shape, mesh),
+                        filtered by divisibility/overlap constraints
+  FFTW_ESTIMATE         ``mode="model"`` — ``cost_model.analytic_cost``
+                        ranks candidates from roofline terms (5 N log2 N
+                        flops, HBM passes, transpose bytes, collective
+                        latency) with zero execution; optional HLO-derived
+                        collective counts via ``cost_model.hlo_collectives``
+  FFTW_PATIENT          ``mode="measure"`` — ``measure.measure_candidate``
+                        compiles and wall-clocks the model-ranked top-k
+                        (plus the untuned default) on the live mesh
+  wisdom import/export  ``wisdom.Wisdom`` — JSON store keyed by
+                        shape|mesh|dtype|backend; ``mode="wisdom"`` reuses
+                        a stored plan without re-searching, and stores can
+                        be merged across processes/hosts
+
+Entry points: :func:`tune` below, ``Croft3D.tuned(...)`` /
+``Croft3D(..., tune="model")`` in ``repro.core.api``, and the
+``benchmarks/tuning_bench.py`` sweep (``BENCH_tuning.json``).
+"""
+
+from repro.tuning.candidates import (Candidate, default_candidate,
+                                     decompositions_for, enumerate_candidates)
+from repro.tuning.cost_model import (CostBreakdown, analytic_cost,
+                                     hlo_collectives, rank_candidates)
+from repro.tuning.measure import measure_candidate, time_forward
+from repro.tuning.planner import MODES, TuneResult, tune
+from repro.tuning.wisdom import Wisdom, WisdomEntry, wisdom_key
+
+__all__ = [
+    "Candidate", "CostBreakdown", "MODES", "TuneResult", "Wisdom",
+    "WisdomEntry", "analytic_cost", "decompositions_for",
+    "default_candidate", "enumerate_candidates", "hlo_collectives",
+    "measure_candidate", "rank_candidates", "time_forward", "tune",
+    "wisdom_key",
+]

@@ -1,0 +1,144 @@
+"""Candidate enumeration: every valid (Decomposition, FFTOptions) pair.
+
+The planner's search space is the cross product of
+
+  * how the grid maps onto the mesh — slab / pencil / cell, over every
+    ordered assignment of mesh axes (and folded axis groups) that covers
+    the whole mesh, and
+  * the ``FFTOptions`` knob matrix — overlap K, local 1-D FFT
+    implementation, output layout, transpose implementation,
+
+filtered by :meth:`Decomposition.validate` (divisibility, P <= N limits,
+overlap chunking).  Everything here is pure arithmetic over axis *sizes*,
+so candidates can be generated with no devices present.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterator, Mapping, Optional, Sequence
+
+from repro.core.decomposition import Decomposition
+from repro.core.distributed import FFTOptions
+
+# default knob ranges; "pallas" is intentionally absent (TPU-only kernel —
+# callers on TPU pass local_impls=(..., "pallas") explicitly)
+DEFAULT_OVERLAP_KS = (1, 2, 4)
+DEFAULT_LOCAL_IMPLS = ("matmul", "stockham", "xla")
+DEFAULT_LAYOUTS = ("natural", "spectral")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space."""
+
+    decomp: Decomposition
+    opts: FFTOptions
+
+    @property
+    def label(self) -> str:
+        def axis_str(a):
+            if isinstance(a, tuple):
+                return "+".join(a)
+            return a
+        axes = "x".join(axis_str(a) for a in self.decomp.axes)
+        o = self.opts
+        return (f"{self.decomp.kind}[{axes}]/k{o.overlap_k}/{o.local_impl}/"
+                f"{o.output_layout}/{o.transpose_impl}"
+                + ("" if o.plan_cache else "/noplan"))
+
+
+def _groupings(names: Sequence[str], k: int) -> Iterator[tuple]:
+    """Ordered partitions of ``names`` into k non-empty groups.
+
+    Each group becomes one Decomposition axis entry: a bare name when the
+    group is a single axis, a folded tuple otherwise.  Every grouping
+    covers the whole mesh — leaving an axis out would replicate the grid
+    over it (never faster, so not part of the search space).
+    """
+    if len(names) < k:
+        return
+    for assignment in itertools.product(range(k), repeat=len(names)):
+        if set(assignment) != set(range(k)):
+            continue
+        groups = []
+        for g in range(k):
+            members = tuple(n for n, a in zip(names, assignment) if a == g)
+            groups.append(members[0] if len(members) == 1 else members)
+        yield tuple(groups)
+
+
+def decompositions_for(shape: Sequence[int], axis_sizes: Mapping[str, int],
+                       overlap_k: int = 1) -> list[Decomposition]:
+    """All decompositions valid for (shape, mesh axes) at the given K."""
+    names = list(axis_sizes)
+    out: list[Decomposition] = []
+    for kind, slots in (("slab", 1), ("pencil", 2), ("cell", 3)):
+        for axes in _groupings(names, slots):
+            dec = Decomposition(kind, axes)
+            if dec.is_valid(shape, axis_sizes, overlap_k):
+                out.append(dec)
+    return out
+
+
+def enumerate_candidates(
+        shape: Sequence[int],
+        axis_sizes: Mapping[str, int],
+        *,
+        overlap_ks: Sequence[int] = DEFAULT_OVERLAP_KS,
+        local_impls: Sequence[str] = DEFAULT_LOCAL_IMPLS,
+        layouts: Sequence[str] = DEFAULT_LAYOUTS,
+        include_baselines: bool = False,
+) -> list[Candidate]:
+    """The full valid search space, deterministically ordered.
+
+    ``include_baselines`` adds configurations that model the paper's
+    baselines and are never expected to win — ``transpose_impl="pairwise"``
+    (FFTW3's sendrecv pattern) and ``plan_cache=False`` (options 1/3) —
+    useful for benchmark sweeps, noise for production tuning.
+    """
+    out: list[Candidate] = []
+    for k in overlap_ks:
+        for dec in decompositions_for(shape, axis_sizes, overlap_k=k):
+            for impl in local_impls:
+                for layout in layouts:
+                    if layout == "spectral" and dec.kind == "cell":
+                        continue  # cell pipeline restores natural layout
+                    variants = [dict(transpose_impl="alltoall",
+                                     plan_cache=True)]
+                    if include_baselines:
+                        variants.append(dict(transpose_impl="alltoall",
+                                             plan_cache=False))
+                        if all(not isinstance(a, tuple) for a in dec.axes):
+                            variants.append(dict(transpose_impl="pairwise",
+                                                 plan_cache=True))
+                    for var in variants:
+                        out.append(Candidate(dec, FFTOptions(
+                            overlap_k=k, local_impl=impl,
+                            output_layout=layout, **var)))
+    return out
+
+
+def default_candidate(shape: Sequence[int],
+                      axis_sizes: Mapping[str, int]) -> Optional[Candidate]:
+    """What an untuned caller would pick: the decomposition kind matching
+    the mesh rank (slab for 1 axis, pencil for 2, cell for 3, folded
+    pencil otherwise) with stock ``FFTOptions()``.  None if invalid for
+    the shape."""
+    names = list(axis_sizes)
+    if len(names) == 1:
+        dec = Decomposition("slab", (names[0],))
+    elif len(names) == 2:
+        dec = Decomposition("pencil", tuple(names))
+    elif len(names) == 3:
+        dec = Decomposition("cell", tuple(names))
+    else:
+        dec = Decomposition("pencil", (tuple(names[:-1]), names[-1]))
+    opts = FFTOptions()
+    if not dec.is_valid(shape, axis_sizes, opts.overlap_k):
+        if not dec.is_valid(shape, axis_sizes, 1):
+            return None
+        opts = dataclasses.replace(opts, overlap_k=1)
+    return Candidate(dec, opts)

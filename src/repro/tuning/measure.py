@@ -1,0 +1,60 @@
+"""Empirical measurement — the planner's FFTW-``PATIENT`` leg.
+
+Lowers, compiles, and wall-clock-times candidate plans on the live mesh.
+Only the model-ranked top-k reach this stage (compiling every candidate
+would be minutes of XLA time for a large mesh), mirroring how FFTW's
+PATIENT mode prunes with heuristics before timing.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.tuning.candidates import Candidate
+
+
+def _random_input(shape, dtype, sharding):
+    key = jax.random.PRNGKey(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        real_dt = jnp.dtype(f"float{jnp.dtype(dtype).itemsize * 4}")
+        kr, ki = jax.random.split(key)
+        x = (jax.random.normal(kr, shape, real_dt)
+             + 1j * jax.random.normal(ki, shape, real_dt)).astype(dtype)
+    else:
+        x = jax.random.normal(key, shape, dtype)
+    if sharding is not None:
+        x = jax.device_put(x, sharding)
+    return x
+
+
+def time_forward(plan, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per forward transform of a built plan."""
+    x = _random_input(plan.shape, plan.dtype, plan.input_sharding)
+    for _ in range(warmup):
+        jax.block_until_ready(plan.forward(x))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan.forward(x))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
+                      dtype=jnp.complex64, *, warmup: int = 2,
+                      iters: int = 5) -> Optional[float]:
+    """Median forward seconds for one candidate on the live mesh; None if
+    the candidate fails to build/compile (it is then dropped from the
+    race rather than failing the whole tune)."""
+    from repro.core.api import Croft3D
+    try:
+        plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
+                       dtype=jnp.dtype(dtype))
+        return time_forward(plan, warmup=warmup, iters=iters)
+    except Exception:
+        return None

@@ -1,0 +1,165 @@
+"""The planner: candidate search + wisdom, orchestrated FFTW-style.
+
+``tune()`` is the single entry point.  Modes map onto FFTW's planner
+rigor levels:
+
+  mode="wisdom"   use a stored plan if one matches; otherwise fall back
+                  to "model" and remember the result.
+  mode="model"    FFTW ESTIMATE — rank every valid candidate with the
+                  analytic cost model, return the cheapest.  Zero
+                  execution; works with no devices (pass axis_sizes).
+  mode="measure"  FFTW PATIENT — model-rank, then compile and wall-clock
+                  the top-k (plus the untuned default, so the tuned plan
+                  is never slower than what the caller would have picked
+                  by hand) and return the fastest measured.
+
+The result carries the full ranked report for inspection and is written
+into the wisdom store when a path is given.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decomposition import Decomposition
+from repro.core.distributed import FFTOptions
+from repro.tuning import candidates as cand_lib
+from repro.tuning import cost_model, measure, wisdom as wisdom_lib
+
+MODES = ("wisdom", "model", "measure")
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Chosen plan + provenance."""
+
+    decomp: Decomposition
+    opts: FFTOptions
+    source: str                 # "wisdom" | "model" | "measure"
+    key: str
+    ranked: list                # [{label, model_s, measured_s?}, ...]
+    model_s: Optional[float] = None
+    measured_s: Optional[float] = None
+    wisdom_path: Optional[str] = None
+
+    def summary(self) -> str:
+        best = cand_lib.Candidate(self.decomp, self.opts)
+        t = (f"{self.measured_s * 1e6:.0f}us measured"
+             if self.measured_s is not None else
+             f"{self.model_s * 1e6:.0f}us modeled"
+             if self.model_s is not None else "from wisdom")
+        return f"[{self.source}] {best.label} ({t})"
+
+
+def _resolve_axis_sizes(mesh, axis_sizes) -> Mapping[str, int]:
+    if axis_sizes is not None:
+        return dict(axis_sizes)
+    if mesh is not None:
+        return dict(mesh.shape)
+    raise ValueError("tune() needs a mesh or an axis_sizes mapping")
+
+
+def tune(shape: Sequence[int], mesh=None, *,
+         axis_sizes: Optional[Mapping[str, int]] = None,
+         mode: str = "model", dtype=jnp.complex64, top_k: int = 4,
+         wisdom_path: Optional[str] = None, include_baselines: bool = False,
+         measure_iters: int = 5, measure_warmup: int = 2,
+         save: bool = True) -> TuneResult:
+    """Pick (Decomposition, FFTOptions) for a 3-D FFT problem.
+
+    ``mode="measure"`` requires a live ``mesh``; the other modes accept a
+    bare ``axis_sizes`` mapping ({axis_name: size}) and never touch
+    devices.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "measure" and mesh is None:
+        raise ValueError('mode="measure" needs a live mesh to time on')
+    sizes = _resolve_axis_sizes(mesh, axis_sizes)
+    backend = jax.default_backend() if mesh is not None else "any"
+    key = wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), backend)
+    wis = wisdom_lib.Wisdom.load(wisdom_path)
+
+    if mode == "wisdom":
+        # fall back to device-less wisdom (backend "any", written by
+        # meshless mode="model" tunes) when no backend-exact entry exists
+        hit = wis.lookup(key) or wis.lookup(
+            wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), "any"))
+        if hit is not None:
+            try:
+                cand = hit.candidate()
+            except (TypeError, ValueError):
+                cand = None  # corrupt entry values -> miss, re-estimate
+        if hit is not None and cand is not None:
+            return TuneResult(
+                decomp=cand.decomp, opts=cand.opts, source="wisdom", key=key,
+                ranked=[{"label": cand.label, "model_s": hit.model_s,
+                         "measured_s": hit.measured_s}],
+                model_s=hit.model_s, measured_s=hit.measured_s,
+                wisdom_path=wis.path)
+        mode = "model"  # miss: estimate now, remember below
+
+    cands = cand_lib.enumerate_candidates(
+        shape, sizes, include_baselines=include_baselines)
+    if not cands:
+        raise ValueError(
+            f"no valid decomposition for shape={tuple(shape)} over mesh "
+            f"axes {dict(sizes)} — check divisibility")
+    scored = cost_model.rank_candidates(shape, cands, sizes, dtype)
+    ranked = [{"label": c.label, "model_s": b.total_s,
+               "cost": b.to_dict()} for c, b in scored]
+
+    if mode == "model":
+        best, bcost = scored[0]
+        entry = wisdom_lib.WisdomEntry.from_candidate(
+            best, "model", model_s=bcost.total_s)
+        result = TuneResult(decomp=best.decomp, opts=best.opts,
+                            source="model", key=key, ranked=ranked,
+                            model_s=bcost.total_s, wisdom_path=wis.path)
+    else:  # measure
+        pool = [c for c, _ in scored[:max(1, top_k)]]
+        default = cand_lib.default_candidate(shape, sizes)
+        if default is not None and default not in pool:
+            pool.append(default)
+        model_by_cand = {c: b.total_s for c, b in scored}
+        raced = []
+        for c in pool:
+            t = measure.measure_candidate(
+                shape, mesh, c, dtype, warmup=measure_warmup,
+                iters=measure_iters)
+            if t is not None:
+                raced.append((c, t))
+        if not raced:
+            raise RuntimeError("every measured candidate failed to compile")
+        raced.sort(key=lambda ct: ct[1])
+        best, best_t = raced[0]
+        measured = {c.label: t for c, t in raced}
+        for row in ranked:
+            if row["label"] in measured:
+                row["measured_s"] = measured[row["label"]]
+        for c, t in raced:  # default candidate may not be in ranked top list
+            if not any(r["label"] == c.label for r in ranked):
+                ranked.append({"label": c.label, "measured_s": t})
+        entry = wisdom_lib.WisdomEntry.from_candidate(
+            best, "measure", model_s=model_by_cand.get(best),
+            measured_s=best_t)
+        if save and wis.path:
+            # HLO collective stats ride along in persisted wisdom only —
+            # extracting them costs a recompile of the winner
+            from repro.core.api import Croft3D
+            entry.hlo = cost_model.hlo_collectives(
+                Croft3D(tuple(shape), mesh, best.decomp, best.opts,
+                        dtype=jnp.dtype(dtype)))
+        result = TuneResult(decomp=best.decomp, opts=best.opts,
+                            source="measure", key=key, ranked=ranked,
+                            model_s=model_by_cand.get(best),
+                            measured_s=best_t, wisdom_path=wis.path)
+
+    wis.record(key, entry)
+    if save and wis.path:
+        wis.save()
+    return result

@@ -1,0 +1,164 @@
+"""Persistent wisdom — FFTW's ``fftw_export_wisdom`` for the planner.
+
+A wisdom store is a JSON file mapping problem keys to the winning
+(decomposition, options) plus how the winner was chosen (model score or
+measured seconds).  The key captures everything the plan depends on:
+
+    Nx x Ny x Nz | mesh axis names+sizes | dtype | backend
+
+so a plan tuned once (e.g. on the job's first process, or in a previous
+run) is reused everywhere the same problem shows up.  ``merge`` keeps the
+better-measured entry on key collisions, so wisdom files can be combined
+across hosts like FFTW wisdom.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.decomposition import Decomposition
+from repro.core.distributed import FFTOptions
+from repro.tuning.candidates import Candidate
+
+WISDOM_VERSION = 1
+DEFAULT_PATH_ENV = "CROFT_WISDOM"
+
+
+def wisdom_key(shape: Sequence[int], axis_sizes: Mapping[str, int],
+               dtype, backend: str) -> str:
+    shape_s = "x".join(str(int(s)) for s in shape)
+    # canonical order: the same problem must hash identically regardless
+    # of how the caller ordered the axis mapping
+    mesh_s = ",".join(f"{n}={int(s)}"
+                      for n, s in sorted(axis_sizes.items()))
+    return f"{shape_s}|{mesh_s}|{np.dtype(dtype).name}|{backend}"
+
+
+def _listify(axes):
+    return [list(a) if isinstance(a, tuple) else a for a in axes]
+
+
+def _tuplify(axes):
+    return tuple(tuple(a) if isinstance(a, list) else a for a in axes)
+
+
+@dataclasses.dataclass
+class WisdomEntry:
+    """The chosen plan for one problem key."""
+
+    decomp_kind: str
+    decomp_axes: tuple
+    opts: dict                      # FFTOptions fields
+    source: str                     # "model" | "measure"
+    model_s: Optional[float] = None
+    measured_s: Optional[float] = None
+    hlo: Optional[dict] = None      # collective stats of the winner
+    created: Optional[float] = None
+
+    def candidate(self) -> Candidate:
+        # tolerate opts written by other versions: unknown keys dropped
+        known = {f.name for f in dataclasses.fields(FFTOptions)}
+        opts = {k: v for k, v in self.opts.items() if k in known}
+        return Candidate(Decomposition(self.decomp_kind,
+                                       _tuplify(self.decomp_axes)),
+                         FFTOptions(**opts))
+
+    @classmethod
+    def from_candidate(cls, cand: Candidate, source: str,
+                       model_s: Optional[float] = None,
+                       measured_s: Optional[float] = None,
+                       hlo: Optional[dict] = None) -> "WisdomEntry":
+        return cls(decomp_kind=cand.decomp.kind,
+                   decomp_axes=cand.decomp.axes,
+                   opts=dataclasses.asdict(cand.opts), source=source,
+                   model_s=model_s, measured_s=measured_s, hlo=hlo,
+                   created=time.time())
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["decomp_axes"] = _listify(self.decomp_axes)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WisdomEntry":
+        d = dict(d)
+        d["decomp_axes"] = _tuplify(d.get("decomp_axes", []))
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def better_of(self, other: "WisdomEntry") -> "WisdomEntry":
+        """Prefer measured over modeled, then the faster measurement.
+        Between two unmeasured (model) entries the newer one wins, so
+        cost-model improvements propagate into existing wisdom files."""
+        mine, theirs = self.measured_s, other.measured_s
+        if mine is None:
+            return other
+        if theirs is None or mine <= theirs:
+            return self
+        return other
+
+
+class Wisdom:
+    """In-memory wisdom table with JSON import/export."""
+
+    def __init__(self, entries: Optional[dict] = None,
+                 path: Optional[str] = None):
+        self.entries: dict[str, WisdomEntry] = dict(entries or {})
+        self.path = path
+
+    # -- persistence --------------------------------------------------------
+    @classmethod
+    def load(cls, path: Optional[str] = None) -> "Wisdom":
+        """Load from ``path`` (or $CROFT_WISDOM); missing file -> empty."""
+        path = path or os.environ.get(DEFAULT_PATH_ENV)
+        w = cls(path=path)
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    blob = json.load(f)
+            except (OSError, ValueError):
+                return w  # unreadable/corrupt file -> empty wisdom
+            if not isinstance(blob, dict):
+                return w
+            if blob.get("version", 0) > WISDOM_VERSION:
+                return w  # from a newer version: treat as empty, re-tune
+            for key, d in blob.get("entries", {}).items():
+                try:
+                    w.entries[key] = WisdomEntry.from_json(d)
+                except (TypeError, ValueError):
+                    continue  # malformed entry -> miss, not a crash
+        return w
+
+    def save(self, path: Optional[str] = None) -> Optional[str]:
+        path = path or self.path
+        if not path:
+            return None
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        blob = {"version": WISDOM_VERSION,
+                "entries": {k: e.to_json() for k, e in self.entries.items()}}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    # -- access -------------------------------------------------------------
+    def lookup(self, key: str) -> Optional[WisdomEntry]:
+        return self.entries.get(key)
+
+    def record(self, key: str, entry: WisdomEntry) -> None:
+        prev = self.entries.get(key)
+        self.entries[key] = entry if prev is None else prev.better_of(entry)
+
+    def merge(self, other: "Wisdom") -> None:
+        for key, entry in other.entries.items():
+            self.record(key, entry)
+
+    def __len__(self) -> int:
+        return len(self.entries)

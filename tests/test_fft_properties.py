@@ -8,7 +8,11 @@ uses), sizes drawn from the power-of-two domain the paper restricts to.
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import local_fft as lf
 

@@ -100,8 +100,8 @@ assert np.allclose(ref, got, rtol=2e-4), (ref, got)
 def test_compressed_psum_cross_pod():
     run_multidevice("""
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.parallel.compression import compressed_psum
 mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
 rng = np.random.RandomState(0)

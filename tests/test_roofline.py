@@ -22,7 +22,8 @@ def test_scan_trip_count_multiplied():
         return y
 
     compiled = scanned.lower(w).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    from repro import compat
+    xla_flops = compat.cost_analysis(compiled)["flops"]
     ours = hlo_cost.analyze(compiled.as_text())
     expect = 10 * 2 * 256 ** 3
     assert abs(ours.flops - expect) / expect < 0.02
@@ -59,7 +60,8 @@ def test_unrolled_matches_xla():
 
     compiled = unrolled.lower(w).compile()
     ours = hlo_cost.analyze(compiled.as_text())
-    assert abs(ours.flops - compiled.cost_analysis()["flops"]) \
+    from repro import compat
+    assert abs(ours.flops - compat.cost_analysis(compiled)["flops"]) \
         / ours.flops < 0.02
 
 
@@ -107,12 +109,13 @@ def test_cost_analysis_is_per_partition():
     run_multidevice("""
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
 sh = NamedSharding(mesh, P("x", None))
 @jax.jit
 def f(a):
     return a @ a.T
-ca = f.lower(jax.ShapeDtypeStruct((512, 512), jnp.float32, sharding=sh)).compile().cost_analysis()
+ca = compat.cost_analysis(f.lower(jax.ShapeDtypeStruct((512, 512), jnp.float32, sharding=sh)).compile())
 full = 2 * 512**3
 # per-partition: roughly full/8 (plus collective overhead terms)
 assert ca["flops"] < full / 4, ca["flops"]
