@@ -4,8 +4,10 @@
 CSV rows (derived=0: measured on this host; 1: modeled from compiled
 artifacts / roofline constants — no TPU in this container).
 
-``--smoke`` runs only a fast autotuner sweep (``benchmarks.tuning_bench``)
-— the CI path exercising the planner end to end on every push.
+``--smoke`` runs only the fast sweeps — the autotuner
+(``benchmarks.tuning_bench``) and the real-transform packed-vs-embed
+comparison (``benchmarks.rfft_bench``) — the CI path exercising the
+planner and the r2c pipeline end to end on every push.
 """
 
 import argparse
@@ -14,7 +16,8 @@ import traceback
 
 FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.kernel_micro", "benchmarks.lm_roofline",
-                "benchmarks.train_bench", "benchmarks.tuning_bench"]
+                "benchmarks.train_bench", "benchmarks.tuning_bench",
+                "benchmarks.rfft_bench"]
 
 
 def main() -> None:
@@ -26,8 +29,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     if args.smoke:
-        from benchmarks import tuning_bench
+        from benchmarks import rfft_bench, tuning_bench
         tuning_bench.run(smoke=True)
+        rfft_bench.run(smoke=True)
         return
     for modname in FULL_MODULES:
         try:

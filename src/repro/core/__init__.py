@@ -7,10 +7,11 @@ from repro.core.distributed import (FFTOptions, distributed_fft3d, fft3d,
 from repro.core.local_fft import (fft3d_local, fft_1d, fft_matmul,
                                   fft_stockham, fft_xla)
 from repro.core.plan import FFTPlan, clear_plan_cache, make_plan
+from repro.core.rfft import irfft3d, rfft3d  # after the above: pulls repro.real
 
 __all__ = [
     "Croft3D", "Decomposition", "FFTOptions", "FFTPlan", "auto_pencil",
     "clear_plan_cache", "distributed_fft3d", "fft3d", "fft3d_local", "fft_1d",
-    "fft_matmul", "fft_stockham", "fft_xla", "ifft3d", "make_plan",
-    "pencil_grid_for", "poisson_solve",
+    "fft_matmul", "fft_stockham", "fft_xla", "ifft3d", "irfft3d", "make_plan",
+    "pencil_grid_for", "poisson_solve", "rfft3d",
 ]

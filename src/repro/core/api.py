@@ -3,6 +3,12 @@
 ``Croft3D`` is the analogue of ``croft_parallel3d`` plus FFTW's plan object:
 it binds (grid shape, mesh, decomposition, options) once, validates, and
 exposes jit-compiled forward/inverse transforms.
+
+Problem classes (FFTW-style): ``problem="c2c"`` (default) plans the
+complex transform; ``problem="r2c"`` plans a real-input transform whose
+forward matches ``numpy.fft.rfftn`` and whose inverse is the exact c2r
+— backed by either the packed two-for-one pipeline or the embedding
+fallback (``repro.real``, ``strategy=``).
 """
 
 from __future__ import annotations
@@ -28,6 +34,13 @@ class Croft3D:
     ...                Decomposition("pencil", ("data", "model")))
     >>> y = plan.forward(x)        # x sharded with plan.input_sharding
     >>> x2 = plan.inverse(y)       # == x up to dtype tolerance
+
+    Real transforms: ``Croft3D(shape, mesh, dec, problem="r2c")`` plans
+    r2c/c2r.  ``forward`` then takes a real array (see ``input_dtype`` /
+    ``input_sharding`` — the packed strategy wants z-pencils) and returns
+    the (Nx, Ny, Nz//2 + 1) half spectrum; ``inverse`` returns the real
+    field.  ``strategy`` picks "packed" / "embed" ("auto" = packed where
+    supported).
     """
 
     shape: tuple[int, int, int]
@@ -35,6 +48,10 @@ class Croft3D:
     decomp: Optional[Decomposition] = None
     opts: FFTOptions = dataclasses.field(default_factory=FFTOptions)
     dtype: jnp.dtype = jnp.complex64
+    #: problem class: "c2c" | "r2c" (``dtype`` is always the spectrum dtype)
+    problem: str = "c2c"
+    #: r2c only: "packed" | "embed" | None (= auto); resolved in __post_init__
+    strategy: Optional[str] = None
     #: autotune mode ("wisdom" | "model" | "measure"); when set, the
     #: planner overrides ``decomp``/``opts`` (see ``repro.tuning``)
     tune: Optional[str] = None
@@ -44,37 +61,82 @@ class Croft3D:
     tune_result = None  # TuneResult when the planner picked the plan
 
     def __post_init__(self):
+        if self.problem not in ("c2c", "r2c"):
+            raise ValueError(f"problem must be 'c2c' or 'r2c', got {self.problem!r}")
         if self.tune is not None and self.mesh is None:
             raise ValueError("tune= needs a mesh (single-device plans have "
                              "nothing to tune)")
         if self.tune is not None:
             from repro import tuning
             result = tuning.tune(self.shape, self.mesh, mode=self.tune,
-                                 dtype=self.dtype,
+                                 dtype=self.dtype, problem=self.problem,
                                  wisdom_path=self.wisdom_path,
                                  **(self.tune_kw or {}))
             self.decomp, self.opts = result.decomp, result.opts
+            if self.problem == "r2c":
+                self.strategy = result.strategy
             self.tune_result = result
         if self.mesh is not None:
             if self.decomp is None:
                 raise ValueError("a mesh requires a Decomposition")
             self.decomp.validate(self.shape, self.mesh, self.opts.overlap_k)
-        self._fwd = jax.jit(
-            lambda v: distributed.fft3d(v, self.mesh, self.decomp, self.opts))
-        self._inv = jax.jit(
-            lambda v: distributed.ifft3d(v, self.mesh, self.decomp, self.opts))
+        if self.problem == "r2c":
+            from repro import real as real_lib
+            from repro.core import rfft
+            self.strategy = real_lib.resolve_strategy(
+                self.strategy, self.shape, self.mesh, self.decomp, self.opts)
+            strat, nz = self.strategy, self.shape[-1]
+            self._fwd = jax.jit(lambda v: rfft.rfft3d(
+                v, self.mesh, self.decomp, self.opts, strategy=strat))
+            self._inv = jax.jit(lambda v: rfft.irfft3d(
+                v, nz, self.mesh, self.decomp, self.opts, strategy=strat))
+        else:
+            self._fwd = jax.jit(lambda v: distributed.fft3d(
+                v, self.mesh, self.decomp, self.opts))
+            self._inv = jax.jit(lambda v: distributed.ifft3d(
+                v, self.mesh, self.decomp, self.opts))
+
+    # -- dtypes / shapes -----------------------------------------------------
+    @property
+    def input_dtype(self) -> jnp.dtype:
+        """What ``forward`` consumes: real for r2c, ``dtype`` for c2c."""
+        if self.problem == "r2c":
+            from repro.real.packing import real_dtype_for
+            return jnp.dtype(real_dtype_for(self.dtype))
+        return jnp.dtype(self.dtype)
+
+    @property
+    def spectrum_shape(self) -> tuple[int, int, int]:
+        """Global shape of ``forward``'s output."""
+        if self.problem == "r2c":
+            return self.shape[:-1] + (self.shape[-1] // 2 + 1,)
+        return self.shape
 
     # -- shardings ---------------------------------------------------------
     @property
     def input_sharding(self) -> Optional[NamedSharding]:
         if self.mesh is None:
             return None
+        if self.problem == "r2c" and self.strategy == "packed":
+            # packed real input is z-pencils: the r2c stage runs first,
+            # so the pipeline starts where the c2c pipeline ends
+            return NamedSharding(self.mesh, self.decomp.spectral_spec())
         return self.decomp.sharding(self.mesh, "natural")
 
     @property
     def output_sharding(self) -> Optional[NamedSharding]:
         if self.mesh is None:
             return None
+        if self.problem == "r2c":
+            # the (Nx, Ny, Nh) half spectrum keeps Nh = Nz//2 + 1 local
+            # (it never divides the z shards); both strategies emit a
+            # z-local layout, so solvers see kz unsharded.  For cell the
+            # spectral spec still shards z, so mirror the guarded
+            # slice's choice: x/y sharded, z replicated.
+            if self.decomp.kind == "cell":
+                return NamedSharding(self.mesh, P(
+                    self.decomp.axes[0], self.decomp.axes[1], None))
+            return NamedSharding(self.mesh, self.decomp.spectral_spec())
         return self.decomp.sharding(self.mesh, self.opts.output_layout)
 
     def local_shape(self) -> tuple[int, ...]:
@@ -93,38 +155,49 @@ class Croft3D:
     @classmethod
     def tuned(cls, shape, mesh: Mesh, *, mode: str = "model",
               wisdom_path: Optional[str] = None, dtype=jnp.complex64,
-              **tune_kw) -> "Croft3D":
+              problem: str = "c2c", **tune_kw) -> "Croft3D":
         """Plan via the autotuner (``repro.tuning``) instead of hand-picked
         (decomp, opts).
 
         ``mode="model"`` is FFTW ESTIMATE (analytic, zero execution),
         ``mode="measure"`` is PATIENT (times the top candidates on the
         mesh), ``mode="wisdom"`` reuses a stored plan from
-        ``wisdom_path`` (or $CROFT_WISDOM).  The chosen plan's provenance
-        is on ``plan.tune_result``.
+        ``wisdom_path`` (or $CROFT_WISDOM).  ``problem="r2c"`` plans the
+        real transform (the planner also chooses the packed/embed
+        strategy).  The chosen plan's provenance is on
+        ``plan.tune_result``.
         """
         return cls(tuple(shape), mesh, dtype=jnp.dtype(dtype), tune=mode,
-                   wisdom_path=wisdom_path, tune_kw=tune_kw or None)
+                   problem=problem, wisdom_path=wisdom_path,
+                   tune_kw=tune_kw or None)
 
     # -- AOT artifacts for the dry-run / roofline ----------------------------
     def lower_forward(self):
-        spec = jax.ShapeDtypeStruct(self.shape, self.dtype,
+        spec = jax.ShapeDtypeStruct(self.shape, self.input_dtype,
                                     sharding=self.input_sharding)
         return self._fwd.lower(spec)
 
     def flops_model(self) -> float:
-        """Analytic 5 N log2 N FLOP count for the full c2c 3-D transform."""
+        """Analytic 5 N log2 N FLOP count for the full 3-D transform
+        (halved for the packed real problem)."""
         n_total = math.prod(self.shape)
         logn = sum(math.log2(s) for s in self.shape)
-        return 5.0 * n_total * logn
+        flops = 5.0 * n_total * logn
+        if self.problem == "r2c" and self.strategy == "packed":
+            flops *= 0.5
+        return flops
 
     def comm_bytes_model(self) -> float:
         """Bytes each chip injects per transform (both transposes, natural
-        layout doubles it; paper §4.1 transposes are full-volume shuffles)."""
+        layout doubles it; paper §4.1 transposes are full-volume shuffles).
+        The packed real pipeline runs two half-volume transposes plus the
+        half-volume z-localizing epilogue reshard."""
         if self.mesh is None:
             return 0.0
         itemsize = jnp.dtype(self.dtype).itemsize
         n_local = math.prod(self.local_shape()) * itemsize
+        if self.problem == "r2c" and self.strategy == "packed":
+            return 1.5 * n_local  # 3 shuffles x half the complex volume
         n_transposes = {"slab": 1, "pencil": 2, "cell": 3}[self.decomp.kind]
         if self.opts.output_layout == "natural" and self.decomp.kind != "cell":
             n_transposes *= 2
@@ -142,15 +215,18 @@ def auto_pencil(shape: Sequence[int], mesh: Mesh,
 def poisson_solve(rhs: jax.Array, plan: Croft3D, box: float = 2 * math.pi):
     """Spectral Poisson solve  ∇²u = f  on a periodic box (example app).
 
-    Demonstrates the spectral-layout optimization: with
-    ``opts.output_layout='spectral'`` the two restoring transposes of the
-    forward and the two leading transposes of the inverse are all skipped.
+    Works with both problem classes: a c2c plan sees the full spectrum, an
+    r2c plan the Hermitian half (kz from ``rfftfreq``) — the real path
+    demonstrates the packed pipeline's halved round trip.
     """
     nx, ny, nz = plan.shape
-    f_hat = plan.forward(rhs.astype(plan.dtype))
+    f_hat = plan.forward(rhs.astype(plan.input_dtype))
     kx = jnp.fft.fftfreq(nx, d=box / (2 * math.pi * nx))
     ky = jnp.fft.fftfreq(ny, d=box / (2 * math.pi * ny))
-    kz = jnp.fft.fftfreq(nz, d=box / (2 * math.pi * nz))
+    if plan.problem == "r2c":
+        kz = jnp.fft.rfftfreq(nz, d=box / (2 * math.pi * nz))
+    else:
+        kz = jnp.fft.fftfreq(nz, d=box / (2 * math.pi * nz))
     k2 = (kx[:, None, None] ** 2 + ky[None, :, None] ** 2
           + kz[None, None, :] ** 2)
     inv_k2 = jnp.where(k2 == 0, 0.0, -1.0 / jnp.where(k2 == 0, 1.0, k2))

@@ -93,7 +93,12 @@ class FFTOptions:
     plan_cache     True = "single plan" (options 2/4); False = re-materialize
                    twiddles per call ("multiple plans", options 1/3).
     local_impl     "matmul" (four-step, MXU-native) | "stockham" | "xla"
-                   | "pallas" (four-step Pallas kernel).
+                   | "pallas" (four-step Pallas kernel); or a 3-tuple of
+                   those, one per pipeline stage in execution order (the
+                   i-th 1-D FFT of the pipeline uses local_impl[i] — e.g.
+                   matmul on the contiguous first axis, Stockham on the
+                   strided later ones).  A homogeneous tuple collapses to
+                   its single value (canonical form for wisdom keys).
     output_layout  "natural" (paper: restore the input pencil layout with two
                    reverse transposes) | "spectral" (beyond-paper: stay in
                    z-pencil layout, halving collective bytes).
@@ -102,9 +107,26 @@ class FFTOptions:
 
     overlap_k: int = 2
     plan_cache: bool = True
-    local_impl: str = "matmul"
+    local_impl: Union[str, tuple] = "matmul"
     output_layout: str = "natural"
     transpose_impl: str = "alltoall"
+
+    def __post_init__(self):
+        li = self.local_impl
+        if isinstance(li, (list, tuple)):
+            li = tuple(li)
+            if len(li) != 3:
+                raise ValueError(
+                    f"per-stage local_impl needs exactly 3 entries, got {li}")
+            if len(set(li)) == 1:
+                li = li[0]
+            object.__setattr__(self, "local_impl", li)
+
+    def stage_impl(self, stage: int) -> str:
+        """Local 1-D implementation for the given pipeline stage."""
+        if isinstance(self.local_impl, tuple):
+            return self.local_impl[stage]
+        return self.local_impl
 
     @classmethod
     def paper_option(cls, opt: int, **kw) -> "FFTOptions":
@@ -118,14 +140,15 @@ class FFTOptions:
         return cls(**{**table[opt], **kw})
 
 
-def _fft_along(blk: jax.Array, axis: int, sign: int, opts: FFTOptions) -> jax.Array:
-    return local_fft.fft_1d(blk, axis, sign, impl=opts.local_impl,
+def _fft_along(blk: jax.Array, axis: int, sign: int, opts: FFTOptions,
+               stage: int = 0) -> jax.Array:
+    return local_fft.fft_1d(blk, axis, sign, impl=opts.stage_impl(stage),
                             plan_cache=opts.plan_cache)
 
 
 def _stage(blk: jax.Array, *, fft_axis: Optional[int], comm_axis: Optional[AxisName],
            split_axis: int, concat_axis: int, chunk_axis: int, sign: int,
-           opts: FFTOptions) -> jax.Array:
+           opts: FFTOptions, stage: int = 0) -> jax.Array:
     """One pipeline stage: local FFT along ``fft_axis`` overlapped with the
     global transpose over ``comm_axis`` (paper steps {1,2,3}, {5,6,7}).
 
@@ -133,18 +156,23 @@ def _stage(blk: jax.Array, *, fft_axis: Optional[int], comm_axis: Optional[AxisN
     involved in the transpose).  Chunk i's all_to_all is independent of chunk
     i+1's FFT — the overlap the paper implements with its second OpenMP
     thread, here left to the XLA async-collective scheduler.
+
+    ``stage`` is the pipeline-order index of this 1-D FFT, selecting the
+    per-stage implementation when ``opts.local_impl`` is a 3-tuple.
     """
     k = opts.overlap_k
     if comm_axis is None:  # final stage: FFT only
-        return _fft_along(blk, fft_axis, sign, opts)
+        return _fft_along(blk, fft_axis, sign, opts, stage)
     if k <= 1 or blk.shape[chunk_axis] % k != 0:
-        y = _fft_along(blk, fft_axis, sign, opts) if fft_axis is not None else blk
+        y = (_fft_along(blk, fft_axis, sign, opts, stage)
+             if fft_axis is not None else blk)
         return _all_to_all(y, comm_axis, split_axis, concat_axis,
                            opts.transpose_impl)
     chunks = jnp.split(blk, k, axis=chunk_axis)
     outs = []
     for c in chunks:
-        y = _fft_along(c, fft_axis, sign, opts) if fft_axis is not None else c
+        y = (_fft_along(c, fft_axis, sign, opts, stage)
+             if fft_axis is not None else c)
         outs.append(_all_to_all(y, comm_axis, split_axis, concat_axis,
                                 opts.transpose_impl))
     return jnp.concatenate(outs, axis=chunk_axis)
@@ -163,13 +191,13 @@ def _pencil_body(blk: jax.Array, *, ax_y: AxisName, ax_z: AxisName, sign: int,
     """
     # steps 1-4: FFT along x, transpose x<->y in the column communicator
     blk = _stage(blk, fft_axis=0, comm_axis=ax_y, split_axis=0, concat_axis=1,
-                 chunk_axis=2, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
+                 chunk_axis=2, sign=sign, opts=opts, stage=0)  # (Nx/Py, Ny, Nz/Pz)
     # steps 5-8: FFT along y, transpose y<->z in the row communicator
     blk = _stage(blk, fft_axis=1, comm_axis=ax_z, split_axis=1, concat_axis=2,
-                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny/Pz, Nz)
+                 chunk_axis=0, sign=sign, opts=opts, stage=1)  # (Nx/Py, Ny/Pz, Nz)
     # step 9: FFT along z
     blk = _stage(blk, fft_axis=2, comm_axis=None, split_axis=0, concat_axis=0,
-                 chunk_axis=0, sign=sign, opts=opts)
+                 chunk_axis=0, sign=sign, opts=opts, stage=2)
     if opts.output_layout == "spectral":
         return blk
     # restore: reverse YZ then XY transposes (paper §5.2, also overlapped)
@@ -191,20 +219,20 @@ def _pencil_body_from_spectral(blk: jax.Array, *, ax_y: AxisName,
     """
     # FFT along z while z is local, then hand z back to the row communicator
     blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=1,
-                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
+                 chunk_axis=0, sign=sign, opts=opts, stage=0)  # (Nx/Py, Ny, Nz/Pz)
     blk = _stage(blk, fft_axis=1, comm_axis=ax_y, split_axis=1, concat_axis=0,
-                 chunk_axis=2, sign=sign, opts=opts)      # (Nx, Ny/Py, Nz/Pz)
+                 chunk_axis=2, sign=sign, opts=opts, stage=1)  # (Nx, Ny/Py, Nz/Pz)
     blk = _stage(blk, fft_axis=0, comm_axis=None, split_axis=0, concat_axis=0,
-                 chunk_axis=0, sign=sign, opts=opts)
+                 chunk_axis=0, sign=sign, opts=opts, stage=2)
     return blk
 
 
 def _slab_body_from_spectral(blk: jax.Array, *, ax_z: AxisName, sign: int,
                              opts: FFTOptions) -> jax.Array:
-    blk = _fft_along(blk, 1, sign, opts)
+    blk = _fft_along(blk, 1, sign, opts, stage=0)
     blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=0,
-                 chunk_axis=1, sign=sign, opts=opts)       # (Nx, Ny, Nz/P)
-    blk = _fft_along(blk, 0, sign, opts)
+                 chunk_axis=1, sign=sign, opts=opts, stage=1)  # (Nx, Ny, Nz/P)
+    blk = _fft_along(blk, 0, sign, opts, stage=2)
     return blk
 
 
@@ -215,10 +243,10 @@ def _slab_body(blk: jax.Array, *, ax_z: AxisName, sign: int,
     in: (Nx, Ny, Nz/P) -> local 2-D FFT over (x, y), one global transpose,
     FFT along z.  P <= Nz is the scaling wall the paper's tables 1/3 show.
     """
-    blk = _fft_along(blk, 1, sign, opts)  # y is free on both layouts
+    blk = _fft_along(blk, 1, sign, opts, stage=0)  # y is free on both layouts
     blk = _stage(blk, fft_axis=0, comm_axis=ax_z, split_axis=0, concat_axis=2,
-                 chunk_axis=1, sign=sign, opts=opts)       # (Nx/P, Ny, Nz)
-    blk = _fft_along(blk, 2, sign, opts)
+                 chunk_axis=1, sign=sign, opts=opts, stage=1)  # (Nx/P, Ny, Nz)
+    blk = _fft_along(blk, 2, sign, opts, stage=2)
     if opts.output_layout == "spectral":
         return blk                                          # z-slabs over x
     blk = _stage(blk, fft_axis=None, comm_axis=ax_z, split_axis=2, concat_axis=0,

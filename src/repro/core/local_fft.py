@@ -131,12 +131,18 @@ def fft_1d(x: jax.Array, axis: int, sign: int = -1, *, impl: str = "matmul",
     return jnp.moveaxis(y, -1, axis)
 
 
-def fft3d_local(x: jax.Array, sign: int = -1, *, impl: str = "matmul",
+def fft3d_local(x: jax.Array, sign: int = -1, *, impl="matmul",
                 plan_cache: bool = True, norm: Optional[str] = None) -> jax.Array:
-    """Single-device 3-D FFT over the last three axes (x, y, z order)."""
+    """Single-device 3-D FFT over the last three axes (x, y, z order).
+
+    ``impl`` may be a 3-tuple of implementations, one per axis in
+    transform order (x, y, z) — the per-stage form of
+    ``FFTOptions.local_impl``.
+    """
     assert x.ndim >= 3
-    for ax in (-3, -2, -1):
-        x = fft_1d(x, ax, sign, impl=impl, plan_cache=plan_cache)
+    for stage, ax in enumerate((-3, -2, -1)):
+        stage_impl = impl[stage] if isinstance(impl, (tuple, list)) else impl
+        x = fft_1d(x, ax, sign, impl=stage_impl, plan_cache=plan_cache)
     return apply_norm(x, sign, norm)
 
 

@@ -1,53 +1,114 @@
 """Real-to-complex / complex-to-real 3-D transforms.
 
-The paper lists r2c/c2r as future work (§8); we implement them on top of the
-c2c pipeline.  The distributed path is the straightforward embedding (cast,
-c2c, keep the non-redundant half of the last axis); the packed two-for-one
-real trick is a documented follow-on optimization (DESIGN.md §2) — the
-embedding is bandwidth-suboptimal by 2x on the first stage but exactly
-matches ``numpy.fft.rfftn`` semantics, which is what the verification needs.
+The paper lists r2c/c2r as future work (§8).  Two strategies, dispatched
+here (the stable entry points) and implemented in ``repro.real``:
+
+``strategy="packed"``   the native path: two real z-pencils share one
+    complex transform (two-for-one), the spectrum travels as exactly
+    Nz/2 shard-aligned complex bins (Nyquist folded into DC), and every
+    stage computes/moves half of what the c2c pipeline would.  See
+    ``repro.real.pipeline`` for the layout contract (distributed input
+    is *z-pencils*, ``Decomposition.spectral_spec()``).
+
+``strategy="embed"``    cast to complex, run c2c, keep the non-redundant
+    half of the last axis.  2x first-stage bandwidth waste, but valid
+    for every decomposition/shape — the fallback and numerical oracle.
+
+``strategy="auto"`` (default) picks packed wherever it is supported.
+Both match ``numpy.fft.rfftn`` / ``irfftn`` semantics with axes in
+(x, y, z) order.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import distributed, local_fft
 from repro.core.decomposition import Decomposition
 from repro.core.distributed import FFTOptions
+from repro import real as real_lib
+# submodule-import form: resolves even while repro.real's own __init__ is
+# still running (e.g. `import repro.real` pulls repro.core, which pulls
+# this module, before repro.real has bound its `packing` attribute)
+from repro.real import packing as _real_packing
+
+
+def _is_multidevice(mesh) -> bool:
+    return mesh is not None and math.prod(mesh.devices.shape) > 1
+
+
+def _z_shard_count(decomp: Decomposition, mesh, layout: str) -> int:
+    """How many ways the (global) z axis is sharded in the given layout."""
+    spec = (decomp.partition_spec() if layout == "natural"
+            else decomp.spectral_spec())
+    entry = spec[2]
+    if entry is None:
+        return 1
+    sizes = dict(mesh.shape)
+    if isinstance(entry, tuple):
+        return math.prod(sizes[a] for a in entry)
+    return sizes[entry]
+
+
+def _guarded_half_slice(y: jax.Array, nz: int, mesh, decomp, opts) -> jax.Array:
+    """``y[..., : nz//2 + 1]`` that never materializes a cross-shard slice.
+
+    In the natural output layout z is sharded, and the odd-sized half
+    spectrum cannot tile those shards: silently slicing would make XLA
+    gather (or unevenly pad) the spectrum.  Instead we reshard z to be
+    local first (an all-to-all shuffle, no gather) and slice locally —
+    which also honors ``Croft3D.output_sharding``'s contract that every
+    r2c spectrum comes back in the z-local layout.
+    """
+    nh = nz // 2 + 1
+    if not _is_multidevice(mesh) or decomp is None:
+        return y[..., :nh]
+    if _z_shard_count(decomp, mesh, opts.output_layout) == 1:
+        return y[..., :nh]
+    if decomp.kind in ("pencil", "slab"):
+        target = decomp.spectral_spec()        # z local, x/y take the shards
+    else:  # cell: no 3-axis layout keeps z local; replicate over the z axis
+        target = P(decomp.axes[0], decomp.axes[1], None)
+    return real_lib.constrain_sharding(y, NamedSharding(mesh, target))[..., :nh]
 
 
 def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
-           opts: Optional[FFTOptions] = None) -> jax.Array:
+           opts: Optional[FFTOptions] = None,
+           strategy: str = "auto") -> jax.Array:
     """Real input (Nx, Ny, Nz) -> complex (Nx, Ny, Nz//2 + 1).
 
     Matches ``jnp.fft.rfftn`` with axes in (x, y, z) order (z contiguous,
-    halved — the axis that stays local at the end of the pencil pipeline, so
-    the truncation never crosses a shard boundary in spectral layout).
+    halved).  ``strategy``: "packed" | "embed" | "auto" (see module doc).
+    NOTE the packed distributed input layout is z-pencils
+    (``decomp.spectral_spec()``), not the c2c natural layout.
     """
     if opts is None:
         opts = FFTOptions()
     if jnp.iscomplexobj(x):
         raise ValueError("rfft3d expects a real array")
+    resolved = real_lib.resolve_strategy(strategy, x.shape, mesh, decomp, opts)
+    if resolved == "packed":
+        if not _is_multidevice(mesh):
+            return real_lib.local_rfft3d_packed(x, opts)
+        return real_lib.packed_rfft3d(x, mesh, decomp, opts)
     nz = x.shape[-1]
     xc = x.astype(jnp.complex64 if x.dtype != jnp.float64 else jnp.complex128)
     y = distributed.fft3d(xc, mesh, decomp, opts)
-    # non-redundant half along z; in natural layout z is sharded, so slice
-    # globally (XLA turns this into a shard-local slice when divisible)
-    return y[..., : nz // 2 + 1]
+    return _guarded_half_slice(y, nz, mesh, decomp, opts)
 
 
-def _negate_freq(a: jax.Array, axis: int) -> jax.Array:
-    """Index map k -> (-k) mod N along ``axis``: [0, N-1, N-2, ..., 1]."""
-    return jnp.roll(jnp.flip(a, axis), 1, axis)
+_negate_freq = _real_packing.negate_freq  # k -> (-k) mod N index map
 
 
 def irfft3d(y: jax.Array, nz: int, mesh=None,
             decomp: Optional[Decomposition] = None,
-            opts: Optional[FFTOptions] = None) -> jax.Array:
+            opts: Optional[FFTOptions] = None,
+            strategy: str = "auto") -> jax.Array:
     """Inverse of :func:`rfft3d`; reconstructs the Hermitian half.
 
     F[kx, ky, kz] = conj(F[-kx mod Nx, -ky mod Ny, nz - kz]) for the
@@ -55,6 +116,12 @@ def irfft3d(y: jax.Array, nz: int, mesh=None,
     """
     if opts is None:
         opts = FFTOptions()
+    shape = (y.shape[-3], y.shape[-2], nz)
+    resolved = real_lib.resolve_strategy(strategy, shape, mesh, decomp, opts)
+    if resolved == "packed":
+        if not _is_multidevice(mesh):
+            return real_lib.local_irfft3d_packed(y, nz, opts)
+        return real_lib.packed_irfft3d(y, nz, mesh, decomp, opts)
     body = y[..., 1: (nz + 1) // 2]           # kz' = 1 .. ceil(nz/2)-1
     tail = jnp.conj(body)
     tail = _negate_freq(tail, -3)             # -kx mod Nx

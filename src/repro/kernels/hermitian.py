@@ -1,0 +1,129 @@
+"""Pallas kernels for the real-transform hot steps (repro.real).
+
+Two fused plane kernels in the style of ``spectral_scale.py`` (f32
+real/imag planes, row-blocked grid, interpret mode on CPU):
+
+unpack_two_for_one_planes   C = FFT(a + i*b) of two packed real pencils
+                            -> the two half spectra A, B via Hermitian
+                            symmetry, with the (real) Nyquist bin folded
+                            into the (real) DC bin's imaginary slot —
+                            one HBM read of C, one write of A and B,
+                            instead of the 6+ passes the unfused
+                            flip/conj/axpy chain costs.
+
+hermitian_extend_planes     the exact inverse: folded half spectra A, B
+                            -> the full length-n packed spectrum
+                            C[k] = A[k] + i*B[k], C[n-k] = conj(A[k] - i*B[k]),
+                            ready for one complex inverse FFT.
+
+Rows are independent z-lines (the caller flattens (..., pairs) into the
+row axis); each block sees full rows, so the frequency reversal
+k -> (-k) mod n stays inside the block.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Repo convention (kernels/ops.py): compiled on TPU, interpreter
+    elsewhere, unless the caller forces it."""
+    if interpret is not None:
+        return interpret
+    from repro.kernels.ops import _on_tpu
+    return not _on_tpu()
+
+
+def _pick_block_rows(b: int, n: int, n_planes: int) -> int:
+    """Largest divisor of ``b`` keeping ~n_planes f32 planes under ~4 MB."""
+    block = max(1, min(b, (4 * 1024 * 1024) // (n_planes * n * 4)))
+    while b % block:
+        block -= 1
+    return block
+
+
+def _unpack_kernel(cr_ref, ci_ref, ar_ref, ai_ref, br_ref, bi_ref):
+    cr = cr_ref[...]
+    ci = ci_ref[...]
+    # C[(-k) mod n]: [0, n-1, ..., 1]
+    rr = jnp.roll(jnp.flip(cr, -1), 1, -1)
+    ri = jnp.roll(jnp.flip(ci, -1), 1, -1)
+    n = cr.shape[-1]
+    nz2 = n // 2
+    a_r = 0.5 * (cr + rr)          # A = (C + conj(Crev)) / 2
+    a_i = 0.5 * (ci - ri)
+    b_r = 0.5 * (ci + ri)          # B = (C - conj(Crev)) / 2i
+    b_i = -0.5 * (cr - rr)
+    # fold: bin 0 becomes (DC, Nyquist) — both bins of a real transform
+    # are real, so their real parts carry everything
+    ar_ref[...] = a_r[..., :nz2]
+    ai_ref[...] = jnp.concatenate([a_r[..., nz2:nz2 + 1], a_i[..., 1:nz2]], -1)
+    br_ref[...] = b_r[..., :nz2]
+    bi_ref[...] = jnp.concatenate([b_r[..., nz2:nz2 + 1], b_i[..., 1:nz2]], -1)
+
+
+def unpack_two_for_one_planes(cr, ci, *, block_rows: int = 0,
+                              interpret: Optional[bool] = None):
+    """(B, n) f32 planes of C -> four (B, n//2) planes (Ar, Ai, Br, Bi)."""
+    interpret = _resolve_interpret(interpret)
+    b, n = cr.shape
+    if n % 2:
+        raise ValueError(f"two-for-one fold needs even n, got {n}")
+    if block_rows <= 0:
+        block_rows = _pick_block_rows(b, n, 6)
+    nz2 = n // 2
+    grid = (b // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, nz2), lambda i: (i, 0))
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((b, nz2), jnp.float32)] * 4,
+        interpret=interpret,
+    )(cr, ci)
+
+
+def _extend_kernel(sar_ref, sai_ref, sbr_ref, sbi_ref, cr_ref, ci_ref):
+    sar = sar_ref[...]
+    sai = sai_ref[...]
+    sbr = sbr_ref[...]
+    sbi = sbi_ref[...]
+    # C[0] = A[0] + i B[0];  C[nyq] = A[nyq] + i B[nyq]  (folded in bin 0)
+    c0_r, c0_i = sar[..., :1], sbr[..., :1]
+    cn_r, cn_i = sai[..., :1], sbi[..., :1]
+    # bins 1..nz2-1:  C[k] = A[k] + i B[k]
+    body_r = sar[..., 1:] - sbi[..., 1:]
+    body_i = sai[..., 1:] + sbr[..., 1:]
+    # bins nz2+1..n-1:  C[n-k] = conj(A[k] - i B[k])
+    tail_r = jnp.flip(sar[..., 1:] + sbi[..., 1:], -1)
+    tail_i = jnp.flip(-(sai[..., 1:] - sbr[..., 1:]), -1)
+    cr_ref[...] = jnp.concatenate([c0_r, body_r, cn_r, tail_r], -1)
+    ci_ref[...] = jnp.concatenate([c0_i, body_i, cn_i, tail_i], -1)
+
+
+def hermitian_extend_planes(sar, sai, sbr, sbi, *, block_rows: int = 0,
+                            interpret: Optional[bool] = None):
+    """Four (B, nz2) folded half-spectrum planes -> (B, 2*nz2) C planes."""
+    interpret = _resolve_interpret(interpret)
+    b, nz2 = sar.shape
+    n = 2 * nz2
+    if block_rows <= 0:
+        block_rows = _pick_block_rows(b, n, 6)
+    grid = (b // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, nz2), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _extend_kernel,
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec] * 2,
+        out_shape=[jax.ShapeDtypeStruct((b, n), jnp.float32)] * 2,
+        interpret=interpret,
+    )(sar, sai, sbr, sbi)

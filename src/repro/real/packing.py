@@ -1,0 +1,192 @@
+"""Two-for-one pack/unpack primitives for real 3-D transforms.
+
+The classic trick (Cooley/Tukey-era; P3DFFT and AccFFT both build their
+r2c path on it): two real sequences a, b of length n cost ONE complex
+FFT.  Pack c = a + i*b, transform C = FFT(c), and split with Hermitian
+symmetry:
+
+    A[k] = (C[k] + conj(C[-k mod n])) / 2
+    B[k] = (C[k] - conj(C[-k mod n])) / (2i)
+    C[k] = A[k] + i*B[k]                      (the exact inverse)
+
+Here the two sequences are two real z-pencils of the local block, paired
+along a local axis, so the distributed pipeline runs half as many z
+transforms and every later stage moves half the bytes.
+
+For even n the half spectrum has n/2 + 1 bins — one too many to stay
+shard-aligned through the y/x transposes.  We use the packed
+("halfcomplex" / CRAY-style) layout instead: DC and Nyquist bins of a
+real transform are themselves real, so the Nyquist value rides in the
+imaginary slot of bin 0 and the carried spectrum is exactly n/2 complex
+bins — the same byte count as the real input, and divisible by the same
+process counts.  Because the z-DC and z-Nyquist planes of a real field
+are real (x, y)-planes, the folded bin stays a valid two-for-one packing
+under the later y/x FFTs and is unfolded once, at the end, by a single
+(Nx, Ny)-plane Hermitian reconstruction (``pipeline.unfold_dc_plane``).
+
+All functions are pure jnp (they trace inside ``shard_map`` bodies);
+``use_pallas=True`` routes the hot unpack / Hermitian-extend steps
+through the fused Pallas kernels in ``repro.kernels.hermitian``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def complex_dtype_for(real_dtype) -> jnp.dtype:
+    """Spectrum dtype for a real input dtype (f32 -> c64, f64 -> c128)."""
+    return (jnp.complex128 if jnp.dtype(real_dtype) == jnp.float64
+            else jnp.complex64)
+
+
+def real_dtype_for(complex_dtype) -> jnp.dtype:
+    return (jnp.float64 if jnp.dtype(complex_dtype) == jnp.complex128
+            else jnp.float32)
+
+
+def negate_freq(a: jax.Array, axis: int = -1) -> jax.Array:
+    """Index map k -> (-k) mod N along ``axis``: [0, N-1, N-2, ..., 1]."""
+    return jnp.roll(jnp.flip(a, axis), 1, axis)
+
+
+def pack_two(x: jax.Array, pair_axis: int) -> jax.Array:
+    """Real block -> complex block, halved along ``pair_axis``.
+
+    The first half along ``pair_axis`` becomes the real part, the second
+    half the imaginary part (contiguous halves, not interleaved, so the
+    unpacked spectra land back at their original positions with a single
+    concatenate).  XLA fuses the two slices into the complex construction;
+    there is no kernel-worthy work here.
+    """
+    m = x.shape[pair_axis]
+    if m % 2:
+        raise ValueError(f"pair axis extent {m} must be even to pack two-for-one")
+    a = jax.lax.slice_in_dim(x, 0, m // 2, axis=pair_axis)
+    b = jax.lax.slice_in_dim(x, m // 2, m, axis=pair_axis)
+    return jax.lax.complex(a, b)
+
+
+def unpack_two(C: jax.Array, pair_axis: int, *, nh: Optional[int] = None,
+               fold: bool = False, use_pallas: bool = False) -> jax.Array:
+    """Split the FFT of a packed block into the two half spectra.
+
+    ``C`` is the z-transform of ``pack_two(x)``; the result restores the
+    original extent along ``pair_axis`` with the A spectra in the first
+    half and the B spectra in the second (mirroring ``pack_two``).
+
+    fold=False  keep ``nh`` bins per spectrum (n//2 + 1; works for odd n)
+    fold=True   even n only: keep n//2 bins with the (real) Nyquist bin
+                folded into the imaginary slot of the (real) DC bin —
+                the shard-aligned layout the distributed pipeline carries.
+    """
+    n = C.shape[-1]
+    if fold:
+        if n % 2:
+            raise ValueError("fold=True needs an even transform size")
+        if use_pallas and C.dtype == jnp.complex64:
+            return _unpack_fold_pallas(C, pair_axis)
+    rev = jnp.conj(negate_freq(C, -1))
+    A = 0.5 * (C + rev)
+    B = -0.5j * (C - rev)
+    if fold:
+        nz2 = n // 2
+
+        def folded(S):
+            # DC and Nyquist of a real transform are real; stash Nyquist
+            # in DC's imaginary slot -> exactly nz2 bins, no bin lost
+            s0 = jax.lax.complex(jnp.real(S[..., 0]), jnp.real(S[..., nz2]))
+            return jnp.concatenate([s0[..., None], S[..., 1:nz2]], axis=-1)
+
+        A, B = folded(A), folded(B)
+    else:
+        if nh is None:
+            nh = n // 2 + 1
+        A, B = A[..., :nh], B[..., :nh]
+    return jnp.concatenate([A, B], axis=pair_axis)
+
+
+def repack_halves(S: jax.Array, pair_axis: int, nz: int, *,
+                  folded: bool = False, use_pallas: bool = False) -> jax.Array:
+    """Inverse of :func:`unpack_two`: rebuild the full packed z-spectrum.
+
+    Given the two half spectra stacked along ``pair_axis`` (``folded``
+    matching how they were produced), reconstruct the length-``nz``
+    spectrum C[k] = A[k] + i*B[k] via Hermitian extension
+    (C[nz-k] = conj(A[k] - i*B[k])), ready for one complex inverse FFT
+    whose real/imaginary parts are the two real pencils.
+    """
+    m = S.shape[pair_axis]
+    SA = jax.lax.slice_in_dim(S, 0, m // 2, axis=pair_axis)
+    SB = jax.lax.slice_in_dim(S, m // 2, m, axis=pair_axis)
+    if folded:
+        if use_pallas and S.dtype == jnp.complex64:
+            return _hermitian_extend_pallas(SA, SB, nz)
+        # bin 0 carries (DC, Nyquist) of each spectrum in (real, imag)
+        a0, b0 = SA[..., 0], SB[..., 0]
+        c0 = jax.lax.complex(jnp.real(a0), jnp.real(b0))      # A[0] + i B[0]
+        cn = jax.lax.complex(jnp.imag(a0), jnp.imag(b0))      # A[ny] + i B[ny]
+        body = SA[..., 1:] + 1j * SB[..., 1:]                 # bins 1..nz/2-1
+        tail = jnp.flip(jnp.conj(SA[..., 1:] - 1j * SB[..., 1:]), -1)
+        return jnp.concatenate(
+            [c0[..., None], body, cn[..., None], tail], axis=-1)
+    # DC (and, for even nz, Nyquist) bins of a real transform are real;
+    # keep only their real parts — numpy's irfft applies exactly this
+    # projection, and it is the identity for valid real-field spectra.
+    # Mixing in the imaginary parts via SA + i*SB would leak each
+    # spectrum's anti-Hermitian content into the *other* pencil.
+    nh = SA.shape[-1]
+    c0 = jax.lax.complex(jnp.real(SA[..., 0]), jnp.real(SB[..., 0]))
+    parts = [c0[..., None]]
+    has_nyq = nz % 2 == 0 and nh - 1 == nz // 2
+    body_hi = nh - 1 if has_nyq else nh
+    parts.append(SA[..., 1:body_hi] + 1j * SB[..., 1:body_hi])
+    if has_nyq:
+        cn = jax.lax.complex(jnp.real(SA[..., -1]), jnp.real(SB[..., -1]))
+        parts.append(cn[..., None])
+    ntail = nz - nh
+    t = SA[..., 1:1 + ntail] - 1j * SB[..., 1:1 + ntail]
+    parts.append(jnp.flip(jnp.conj(t), -1))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def split_pairs(c: jax.Array, pair_axis: int) -> jax.Array:
+    """Complex block -> real block, doubled along ``pair_axis``.
+
+    Inverse of :func:`pack_two`: the real parts are the first-half
+    pencils, the imaginary parts the second half.
+    """
+    return jnp.concatenate([jnp.real(c), jnp.imag(c)], axis=pair_axis)
+
+
+# ---------------------------------------------------------------------------
+# Pallas dispatch: flatten to (rows, bins) f32 planes, run the fused
+# kernel, restore shape/dtype.  complex64 only (kernels are f32-plane
+# kernels, matching kernels/spectral_scale.py).
+# ---------------------------------------------------------------------------
+
+def _unpack_fold_pallas(C: jax.Array, pair_axis: int) -> jax.Array:
+    from repro.kernels import hermitian
+    n = C.shape[-1]
+    rows = math.prod(C.shape[:-1])
+    cr = jnp.real(C).reshape(rows, n)
+    ci = jnp.imag(C).reshape(rows, n)
+    ar, ai, br, bi = hermitian.unpack_two_for_one_planes(cr, ci)
+    half = C.shape[:-1] + (n // 2,)
+    A = jax.lax.complex(ar, ai).reshape(half)
+    B = jax.lax.complex(br, bi).reshape(half)
+    return jnp.concatenate([A, B], axis=pair_axis)
+
+
+def _hermitian_extend_pallas(SA: jax.Array, SB: jax.Array, nz: int) -> jax.Array:
+    from repro.kernels import hermitian
+    nz2 = SA.shape[-1]
+    rows = math.prod(SA.shape[:-1])
+    planes = [jnp.real(SA), jnp.imag(SA), jnp.real(SB), jnp.imag(SB)]
+    planes = [p.reshape(rows, nz2) for p in planes]
+    cr, ci = hermitian.hermitian_extend_planes(*planes)
+    return jax.lax.complex(cr, ci).reshape(SA.shape[:-1] + (nz,))

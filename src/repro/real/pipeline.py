@@ -1,0 +1,243 @@
+"""Distributed packed r2c/c2r pipeline (pencil decomposition).
+
+The paper leaves r2c/c2r as future work (§8); this is the native path —
+the embedding fallback lives in ``repro.core.rfft``.  Layouts:
+
+  real input    z-pencils: P(axes[0], axes[1], None) — (Nx/Py, Ny/Pz, Nz)
+                local, z fully local so the r2c stage runs first.  This
+                is ``Decomposition.spectral_spec()``, i.e. the mirror of
+                the c2c pipeline: the real transform *starts* where the
+                complex transform ends.
+  packed        the shard-aligned half spectrum: (Nx, Ny, Nz/2) complex,
+  spectrum      x-pencil sharded P(None, axes[0], axes[1]).  Bin 0 of the
+                z axis carries the (real) DC and Nyquist planes folded
+                into one complex plane (packing.py); bins 1..Nz/2-1 are
+                the true spectrum.
+  r2c output    (Nx, Ny, Nz//2 + 1), ``numpy.fft.rfftn``-compatible, in
+                the z-local spectral layout P(axes[0], axes[1], None) —
+                the packed body is resharded once (an all-to-all of the
+                half volume) so the odd-sized Nh axis is never sharded,
+                then one (Nx, Ny)-plane Hermitian reconstruction
+                (``unfold_dc_plane``) splits the folded DC/Nyquist
+                plane.  Keeping Nh local sidesteps the padding/gather
+                pathologies of slicing a sharded z axis (the same
+                choice ``core.rfft._guarded_half_slice`` makes for the
+                embedding) and hands solvers a kz-local spectrum.
+
+Forward stages (each overlapped with its all_to_all via the K-chunking
+of ``core.distributed._stage``):
+
+  1. pack two real z-pencils -> one complex pencil, FFT along z, unpack
+     via Hermitian symmetry into the folded half spectrum   [stage 0]
+  2. transpose z<->y over axes[1], FFT along y               [stage 1]
+  3. transpose y<->x over axes[0], FFT along x               [stage 2]
+
+Every transpose moves half the bytes of the c2c path and the z FFTs run
+on half as many pencils — the ~2x first-stage bandwidth saving the
+ROADMAP names, compounding with the spectral-layout trick (the packed
+pipeline never pays restoring transposes).
+
+The inverse runs the exact mirror and is algebraically exact: the
+two-for-one split/merge is a linear bijection, so c2r(r2c(x)) == ifft
+(fft(x)) up to the same rounding as the c2c path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.compat import shard_map
+from repro.core.decomposition import Decomposition, _mesh_axis_sizes
+from repro.core.distributed import FFTOptions, _all_to_all, _fft_along, _stage
+from repro.real import packing
+
+
+def packed_unsupported_reason(shape: Sequence[int], decomp: Decomposition,
+                              mesh_or_sizes, opts: FFTOptions) -> Optional[str]:
+    """None if the distributed packed pipeline supports the problem, else
+    a human-readable reason (the planner and ``strategy="auto"`` use this
+    to fall back to the embedding).  Pure arithmetic over axis sizes."""
+    nx, ny, nz = shape[-3], shape[-2], shape[-1]
+    if decomp is None:
+        return "packed distributed path needs a Decomposition"
+    if decomp.kind != "pencil":
+        return f"packed pipeline supports pencil decomposition, not {decomp.kind}"
+    if nz % 2:
+        return f"packed two-for-one needs even Nz, got {nz}"
+    try:
+        sizes = _mesh_axis_sizes(mesh_or_sizes)
+        py, pz = decomp.axis_sizes(sizes)
+    except (KeyError, TypeError) as e:
+        return f"decomposition axes unresolvable on this mesh: {e}"
+    if nx % py:
+        return f"Nx={nx} not divisible by Py={py} (z-pencil input)"
+    if ny % pz:
+        return f"Ny={ny} not divisible by Pz={pz} (z-pencil input)"
+    if (ny // pz) % 2:
+        return (f"local Ny={ny}//{pz} is odd — cannot pair two z-pencils "
+                "per complex transform")
+    if (nz // 2) % pz:
+        return f"half spectrum Nz/2={nz // 2} not divisible by Pz={pz}"
+    if ny % py:
+        return f"Ny={ny} not divisible by Py={py} (y<->x transpose)"
+    if opts is not None and opts.transpose_impl == "pairwise" and any(
+            isinstance(a, tuple) for a in decomp.axes):
+        return "pairwise transpose supports single mesh axes only"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies.  Local axis order is (x, y, z); pairs ride on axis 1.
+# ---------------------------------------------------------------------------
+
+def _packed_fwd_body(blk: jax.Array, *, ax_y, ax_z, opts: FFTOptions) -> jax.Array:
+    """Real (Nx/Py, Ny/Pz, Nz) z-pencil block -> packed (Nx, Ny/Py, Nz2/Pz)."""
+    use_pallas = opts.stage_impl(0) == "pallas"
+
+    def z_stage(c):
+        p = packing.pack_two(c, pair_axis=1)
+        C = _fft_along(p, 2, -1, opts, stage=0)
+        S = packing.unpack_two(C, pair_axis=1, fold=True, use_pallas=use_pallas)
+        return _all_to_all(S, ax_z, split_axis=2, concat_axis=1,
+                           impl=opts.transpose_impl)
+
+    k = opts.overlap_k
+    if k <= 1 or blk.shape[0] % k:
+        blk = z_stage(blk)                       # (Nx/Py, Ny, Nz2/Pz)
+    else:  # K-chunked along the uninvolved x axis, like core._stage
+        blk = jnp.concatenate(
+            [z_stage(c) for c in jnp.split(blk, k, axis=0)], axis=0)
+    blk = _stage(blk, fft_axis=1, comm_axis=ax_y, split_axis=1, concat_axis=0,
+                 chunk_axis=2, sign=-1, opts=opts, stage=1)  # (Nx, Ny/Py, Nz2/Pz)
+    return _fft_along(blk, 0, -1, opts, stage=2)
+
+
+def _packed_inv_body(blk: jax.Array, *, ax_y, ax_z, nz: int,
+                     opts: FFTOptions) -> jax.Array:
+    """Packed (Nx, Ny/Py, Nz2/Pz) block -> real (Nx/Py, Ny/Pz, Nz)."""
+    blk = _stage(blk, fft_axis=0, comm_axis=ax_y, split_axis=0, concat_axis=1,
+                 chunk_axis=2, sign=+1, opts=opts, stage=0)  # (Nx/Py, Ny, Nz2/Pz)
+    blk = _stage(blk, fft_axis=1, comm_axis=ax_z, split_axis=1, concat_axis=2,
+                 chunk_axis=0, sign=+1, opts=opts, stage=1)  # (Nx/Py, Ny/Pz, Nz2)
+    use_pallas = opts.stage_impl(2) == "pallas"
+    C = packing.repack_halves(blk, pair_axis=1, nz=nz, folded=True,
+                              use_pallas=use_pallas)
+    c = _fft_along(C, 2, +1, opts, stage=2)
+    return packing.split_pairs(c, pair_axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DC/Nyquist plane fold/unfold — the only steps touching the odd
+# (Nz//2 + 1)-sized axis, done once per transform on a single plane.
+# ---------------------------------------------------------------------------
+
+def unfold_dc_plane(packed: jax.Array) -> jax.Array:
+    """Packed (Nx, Ny, Nz2) spectrum -> rfftn-style (Nx, Ny, Nz2 + 1).
+
+    Bin 0 holds G = F2(DC_z) + i*F2(Nyq_z) with DC_z/Nyq_z real planes;
+    the 2-D Hermitian split recovers both.  Runs at the global (traced)
+    level so XLA shuffles only this one plane across shards.
+    """
+    g = packed[..., 0]
+    rev = jnp.conj(packing.negate_freq(packing.negate_freq(g, -1), -2))
+    dc = 0.5 * (g + rev)
+    nyq = -0.5j * (g - rev)
+    return jnp.concatenate([dc[..., None], packed[..., 1:], nyq[..., None]],
+                           axis=-1)
+
+
+def _hermitian_plane(p: jax.Array) -> jax.Array:
+    """Project an (..., Nx, Ny) plane onto its 2-D-Hermitian part.
+
+    ``numpy.fft.irfftn`` implicitly applies exactly this projection to
+    the kz=0 and kz=Nyquist planes of a non-Hermitian half spectrum (its
+    z-axis ``irfft`` drops the imaginary parts of those bins per pencil,
+    and Re(ifft2(P)) == ifft2(Hermitian(P))).  For spectra that came
+    from a real field the projection is the identity.
+    """
+    return 0.5 * (p + jnp.conj(packing.negate_freq(
+        packing.negate_freq(p, -1), -2)))
+
+
+def fold_dc_plane(y: jax.Array, nz: int) -> jax.Array:
+    """Inverse of :func:`unfold_dc_plane`.
+
+    The DC/Nyquist planes are first projected onto their Hermitian parts
+    (a no-op for valid real-field spectra) so that arbitrary half
+    spectra — e.g. derivative filters with a surviving Nyquist plane —
+    invert exactly like ``numpy.fft.irfftn``.  Without the projection,
+    anti-Hermitian content of the two planes would leak into each other
+    through the complex fold.
+    """
+    nz2 = nz // 2
+    g = _hermitian_plane(y[..., 0]) + 1j * _hermitian_plane(y[..., nz2])
+    return jnp.concatenate([g[..., None], y[..., 1:nz2]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def real_input_spec(decomp: Decomposition):
+    """PartitionSpec of the packed pipeline's real input (z-pencils)."""
+    return decomp.spectral_spec()
+
+
+def constrain_sharding(y: jax.Array, sharding: NamedSharding) -> jax.Array:
+    """Reshard ``y``: a sharding constraint under tracing, a device_put
+    on concrete arrays (shared by the packed pipeline and core.rfft)."""
+    if isinstance(y, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(y, sharding)
+    return jax.device_put(y, sharding)
+
+
+def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
+                  opts: Optional[FFTOptions] = None) -> jax.Array:
+    """Distributed packed r2c: real (Nx, Ny, Nz) -> (Nx, Ny, Nz//2 + 1)
+    in the z-local spectral layout."""
+    if opts is None:
+        opts = FFTOptions()
+    if x.ndim != 3:
+        raise ValueError("packed_rfft3d expects a rank-3 (Nx,Ny,Nz) array")
+    reason = packed_unsupported_reason(x.shape, decomp, mesh, opts)
+    if reason is not None:
+        raise ValueError(f"packed r2c unsupported here: {reason}")
+    ax_y, ax_z = decomp.axes
+    body = functools.partial(_packed_fwd_body, ax_y=ax_y, ax_z=ax_z, opts=opts)
+    fn = shard_map(body, mesh=mesh, in_specs=real_input_spec(decomp),
+                   out_specs=decomp.partition_spec())
+    out_sharding = NamedSharding(mesh, decomp.spectral_spec())
+    # one half-volume all-to-all brings z local, so the odd-sized Nh axis
+    # stays unsharded and the plane unfold needs no cross-z traffic
+    packed = constrain_sharding(fn(x), out_sharding)
+    return constrain_sharding(unfold_dc_plane(packed), out_sharding)
+
+
+def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
+                   opts: Optional[FFTOptions] = None) -> jax.Array:
+    """Distributed packed c2r: (Nx, Ny, Nz//2 + 1) -> real (Nx, Ny, Nz)."""
+    if opts is None:
+        opts = FFTOptions()
+    if y.ndim != 3:
+        raise ValueError("packed_irfft3d expects a rank-3 spectrum")
+    nx, ny = y.shape[-3], y.shape[-2]
+    reason = packed_unsupported_reason((nx, ny, nz), decomp, mesh, opts)
+    if reason is not None:
+        raise ValueError(f"packed c2r unsupported here: {reason}")
+    # fold in the z-local layout (mirror of the forward's epilogue); the
+    # shard_map in_specs below reshard the packed body back to x-pencils
+    y = constrain_sharding(y, NamedSharding(mesh, decomp.spectral_spec()))
+    packed = fold_dc_plane(y, nz)
+    ax_y, ax_z = decomp.axes
+    body = functools.partial(_packed_inv_body, ax_y=ax_y, ax_z=ax_z, nz=nz,
+                             opts=opts)
+    fn = shard_map(body, mesh=mesh, in_specs=decomp.partition_spec(),
+                   out_specs=real_input_spec(decomp))
+    x = fn(packed)
+    return x * jnp.asarray(1.0 / (nx * ny * nz), x.dtype)

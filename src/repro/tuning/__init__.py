@@ -21,13 +21,24 @@ mapping directly onto FFTW's planner design:
                         compiles and wall-clocks the model-ranked top-k
                         (plus the untuned default) on the live mesh
   wisdom import/export  ``wisdom.Wisdom`` — JSON store keyed by
-                        shape|mesh|dtype|backend; ``mode="wisdom"`` reuses
-                        a stored plan without re-searching, and stores can
-                        be merged across processes/hosts
+                        shape|mesh|dtype|backend[|problem]; ``mode="wisdom"``
+                        reuses a stored plan without re-searching, and stores
+                        can be merged across processes/hosts
+                        (``python -m repro.tuning.wisdom merge``, with a
+                        shipped seed file via ``--seed``)
+
+Problem classes: ``problem="c2c"`` (default) and ``problem="r2c"`` — the
+real transform is a first-class citizen: its candidates carry a
+packed/embed strategy axis (the two-for-one pipeline of ``repro.real``
+vs the embedding fallback), the cost model halves the packed stages'
+roofline terms, measurement runs real-input plans, and wisdom keys gain
+a problem dimension.  ``heterogeneous_impls=True`` additionally searches
+per-stage ``local_impl`` 3-tuples.
 
 Entry points: :func:`tune` below, ``Croft3D.tuned(...)`` /
 ``Croft3D(..., tune="model")`` in ``repro.core.api``, and the
-``benchmarks/tuning_bench.py`` sweep (``BENCH_tuning.json``).
+``benchmarks/tuning_bench.py`` / ``benchmarks/rfft_bench.py`` sweeps
+(``BENCH_tuning.json`` / ``BENCH_rfft.json``).
 """
 
 from repro.tuning.candidates import (Candidate, default_candidate,
@@ -36,12 +47,12 @@ from repro.tuning.cost_model import (CostBreakdown, analytic_cost,
                                      hlo_collectives, rank_candidates)
 from repro.tuning.measure import measure_candidate, time_forward
 from repro.tuning.planner import MODES, TuneResult, tune
-from repro.tuning.wisdom import Wisdom, WisdomEntry, wisdom_key
+from repro.tuning.wisdom import Wisdom, WisdomEntry, load_seed, wisdom_key
 
 __all__ = [
     "Candidate", "CostBreakdown", "MODES", "TuneResult", "Wisdom",
     "WisdomEntry", "analytic_cost", "decompositions_for",
     "default_candidate", "enumerate_candidates", "hlo_collectives",
-    "measure_candidate", "rank_candidates", "time_forward", "tune",
-    "wisdom_key",
+    "load_seed", "measure_candidate", "rank_candidates", "time_forward",
+    "tune", "wisdom_key",
 ]

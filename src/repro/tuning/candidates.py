@@ -6,11 +6,15 @@ The planner's search space is the cross product of
     ordered assignment of mesh axes (and folded axis groups) that covers
     the whole mesh, and
   * the ``FFTOptions`` knob matrix — overlap K, local 1-D FFT
-    implementation, output layout, transpose implementation,
+    implementation (optionally per pipeline stage), output layout,
+    transpose implementation,
 
 filtered by :meth:`Decomposition.validate` (divisibility, P <= N limits,
-overlap chunking).  Everything here is pure arithmetic over axis *sizes*,
-so candidates can be generated with no devices present.
+overlap chunking).  ``problem="r2c"`` additionally enumerates the real-
+transform strategy axis: every c2c candidate as an "embed" plan, plus a
+"packed" two-for-one plan wherever ``repro.real`` supports it.
+Everything here is pure arithmetic over axis *sizes*, so candidates can
+be generated with no devices present.
 """
 
 from __future__ import annotations
@@ -28,6 +32,13 @@ from repro.core.distributed import FFTOptions
 DEFAULT_OVERLAP_KS = (1, 2, 4)
 DEFAULT_LOCAL_IMPLS = ("matmul", "stockham", "xla")
 DEFAULT_LAYOUTS = ("natural", "spectral")
+PROBLEMS = ("c2c", "r2c")
+
+
+def _impl_str(impl) -> str:
+    if isinstance(impl, tuple):
+        return "-".join(impl)
+    return impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +47,10 @@ class Candidate:
 
     decomp: Decomposition
     opts: FFTOptions
+    #: problem class this plan solves
+    problem: str = "c2c"
+    #: r2c only: "packed" | "embed"
+    strategy: Optional[str] = None
 
     @property
     def label(self) -> str:
@@ -45,9 +60,13 @@ class Candidate:
             return a
         axes = "x".join(axis_str(a) for a in self.decomp.axes)
         o = self.opts
-        return (f"{self.decomp.kind}[{axes}]/k{o.overlap_k}/{o.local_impl}/"
+        base = (f"{self.decomp.kind}[{axes}]/k{o.overlap_k}/"
+                f"{_impl_str(o.local_impl)}/"
                 f"{o.output_layout}/{o.transpose_impl}"
                 + ("" if o.plan_cache else "/noplan"))
+        if self.problem != "c2c":
+            base += f"/{self.problem}-{self.strategy}"
+        return base
 
 
 def _groupings(names: Sequence[str], k: int) -> Iterator[tuple]:
@@ -83,6 +102,15 @@ def decompositions_for(shape: Sequence[int], axis_sizes: Mapping[str, int],
     return out
 
 
+def _stagewise_impls(local_impls: Sequence) -> list:
+    """Heterogeneous per-stage combinations (ROADMAP follow-on): every
+    3-tuple over ``local_impls`` whose entries are not all equal (the
+    homogeneous ones are already in the base space as scalars)."""
+    singles = [i for i in local_impls if not isinstance(i, (tuple, list))]
+    return [combo for combo in itertools.product(singles, repeat=3)
+            if len(set(combo)) > 1]
+
+
 def enumerate_candidates(
         shape: Sequence[int],
         axis_sizes: Mapping[str, int],
@@ -91,6 +119,8 @@ def enumerate_candidates(
         local_impls: Sequence[str] = DEFAULT_LOCAL_IMPLS,
         layouts: Sequence[str] = DEFAULT_LAYOUTS,
         include_baselines: bool = False,
+        heterogeneous_impls: bool = False,
+        problem: str = "c2c",
 ) -> list[Candidate]:
     """The full valid search space, deterministically ordered.
 
@@ -98,11 +128,25 @@ def enumerate_candidates(
     baselines and are never expected to win — ``transpose_impl="pairwise"``
     (FFTW3's sendrecv pattern) and ``plan_cache=False`` (options 1/3) —
     useful for benchmark sweeps, noise for production tuning.
+
+    ``heterogeneous_impls`` widens the ``local_impl`` axis with per-stage
+    3-tuples (e.g. matmul on the contiguous first stage, Stockham on the
+    strided ones).
+
+    ``problem="r2c"`` returns real-transform candidates: each valid c2c
+    point as an "embed" plan plus a "packed" two-for-one plan where the
+    packed pipeline's constraints hold (pencil decomposition, even
+    divisibility — see ``repro.real.packed_unsupported_reason``).
     """
+    if problem not in PROBLEMS:
+        raise ValueError(f"problem must be one of {PROBLEMS}, got {problem!r}")
+    impls = list(local_impls)
+    if heterogeneous_impls:
+        impls += _stagewise_impls(local_impls)
     out: list[Candidate] = []
     for k in overlap_ks:
         for dec in decompositions_for(shape, axis_sizes, overlap_k=k):
-            for impl in local_impls:
+            for impl in impls:
                 for layout in layouts:
                     if layout == "spectral" and dec.kind == "cell":
                         continue  # cell pipeline restores natural layout
@@ -118,11 +162,33 @@ def enumerate_candidates(
                         out.append(Candidate(dec, FFTOptions(
                             overlap_k=k, local_impl=impl,
                             output_layout=layout, **var)))
+    if problem == "c2c":
+        return out
+    return _realize_r2c(shape, axis_sizes, out)
+
+
+def _realize_r2c(shape, axis_sizes, base: list[Candidate]) -> list[Candidate]:
+    """Map a c2c candidate list onto the r2c strategy axis.
+
+    The packed pipeline ignores ``output_layout`` (it always starts from
+    z-pencils and ends in x-pencils, two half transposes total), so the
+    packed variant rides only on the spectral-layout points to avoid
+    duplicate plans.
+    """
+    from repro.real import packed_unsupported_reason
+    out: list[Candidate] = []
+    for c in base:
+        out.append(dataclasses.replace(c, problem="r2c", strategy="embed"))
+        if (c.opts.output_layout == "spectral"
+                and packed_unsupported_reason(shape, c.decomp, axis_sizes,
+                                              c.opts) is None):
+            out.append(dataclasses.replace(c, problem="r2c",
+                                           strategy="packed"))
     return out
 
 
-def default_candidate(shape: Sequence[int],
-                      axis_sizes: Mapping[str, int]) -> Optional[Candidate]:
+def default_candidate(shape: Sequence[int], axis_sizes: Mapping[str, int],
+                      problem: str = "c2c") -> Optional[Candidate]:
     """What an untuned caller would pick: the decomposition kind matching
     the mesh rank (slab for 1 axis, pencil for 2, cell for 3, folded
     pencil otherwise) with stock ``FFTOptions()``.  None if invalid for
@@ -141,4 +207,9 @@ def default_candidate(shape: Sequence[int],
         if not dec.is_valid(shape, axis_sizes, 1):
             return None
         opts = dataclasses.replace(opts, overlap_k=1)
+    if problem == "r2c":
+        from repro.real import packed_unsupported_reason
+        strategy = ("packed" if packed_unsupported_reason(
+            shape, dec, axis_sizes, opts) is None else "embed")
+        return Candidate(dec, opts, problem="r2c", strategy=strategy)
     return Candidate(dec, opts)

@@ -20,6 +20,13 @@ collective with ``max(...)`` instead of ``+`` (§5.1 options 3/4), and
 ``plan_cache=False`` pays the twiddle re-materialization the paper's
 options 1/3 measure.
 
+Real-transform candidates (``problem="r2c"``) add a strategy term: the
+packed two-for-one plan halves flops, HBM traffic, and transpose bytes
+(the carried spectrum is Nz/2 bins); the embedding pays full c2c cost
+plus, in the natural layout, the guarded half-slice reshard.  Per-stage
+``local_impl`` tuples score each pipeline stage with its own
+efficiency prior.
+
 For compiled refinement, :func:`hlo_collectives` extracts the *actual*
 collective op count/bytes from post-SPMD HLO via ``launch/hlo_cost.py`` —
 still execution-free, but it needs the mesh's devices to exist.
@@ -78,9 +85,14 @@ def flops_model(shape: Sequence[int]) -> float:
     return 5.0 * n_total * sum(math.log2(s) for s in shape)
 
 
-def transpose_count(decomp: Decomposition, opts: FFTOptions) -> int:
+def transpose_count(decomp: Decomposition, opts: FFTOptions,
+                    strategy: Optional[str] = None) -> int:
     """Global transposes per forward transform (matches
-    ``Croft3D.comm_bytes_model``)."""
+    ``Croft3D.comm_bytes_model``).  The packed real pipeline runs two
+    (half-volume) pipeline transposes plus the z-localizing epilogue
+    reshard (also half volume)."""
+    if strategy == "packed":
+        return 3
     n = {"slab": 1, "pencil": 2, "cell": 3}[decomp.kind]
     if decomp.kind == "cell":
         return 4 * 2  # regroup + pencil(2) + scatter, both ways
@@ -91,34 +103,64 @@ def transpose_count(decomp: Decomposition, opts: FFTOptions) -> int:
 
 def comm_bytes_model(shape: Sequence[int], decomp: Decomposition,
                      axis_sizes: Mapping[str, int], opts: FFTOptions,
-                     itemsize: int = 8) -> float:
+                     itemsize: int = 8,
+                     strategy: Optional[str] = None) -> float:
     """Bytes each chip injects per transform."""
     local = math.prod(decomp.local_shape(shape, axis_sizes)) * itemsize
-    return local * transpose_count(decomp, opts)
+    if strategy == "packed":
+        local *= 0.5  # the carried spectrum is Nz/2 complex bins
+    return local * transpose_count(decomp, opts, strategy)
+
+
+def _compute_seconds(shape: Sequence[int], decomp: Decomposition,
+                     opts: FFTOptions, p: int) -> float:
+    """Per-device FFT seconds, honoring per-stage ``local_impl`` tuples.
+
+    Each axis contributes 5 N log2(n_axis) FLOPs; stage order follows the
+    pipeline (slab transforms y first, pencil/cell x first).
+    """
+    n_total = math.prod(shape)
+    order = (1, 0, 2) if decomp.kind == "slab" else (0, 1, 2)
+    total = 0.0
+    for stage, ax in enumerate(order):
+        eff = IMPL_EFFICIENCY.get(opts.stage_impl(stage), _DEFAULT_EFFICIENCY)
+        total += 5.0 * n_total * math.log2(shape[ax]) / p / (PEAK_FLOPS * eff)
+    return total
 
 
 def analytic_cost(shape: Sequence[int], cand: Candidate,
                   axis_sizes: Mapping[str, int],
                   dtype=jnp.complex64) -> CostBreakdown:
     decomp, opts = cand.decomp, cand.opts
+    strategy = cand.strategy if cand.problem == "r2c" else None
     itemsize = jnp.dtype(dtype).itemsize
     p = decomp.n_procs(axis_sizes)
 
     flops = flops_model(shape) / p
-    eff = IMPL_EFFICIENCY.get(opts.local_impl, _DEFAULT_EFFICIENCY)
-    compute_s = flops / (PEAK_FLOPS * eff)
+    compute_s = _compute_seconds(shape, decomp, opts, p)
+    if strategy == "packed":
+        # two-for-one: half the z transforms, y/x stages on half the bins
+        flops *= 0.5
+        compute_s *= 0.5
 
     local_bytes = math.prod(decomp.local_shape(shape, axis_sizes)) * itemsize
+    if strategy == "packed":
+        local_bytes *= 0.5
     memory_s = LOCAL_PASSES * local_bytes / HBM_BW
 
-    coll_bytes = comm_bytes_model(shape, decomp, axis_sizes, opts, itemsize)
+    coll_bytes = comm_bytes_model(shape, decomp, axis_sizes, opts, itemsize,
+                                  strategy)
+    if strategy == "embed" and opts.output_layout == "natural":
+        # the guarded half-slice reshards ~half the spectrum so the
+        # truncation never crosses shards (core.rfft._guarded_half_slice)
+        coll_bytes += 0.5 * local_bytes
     collective_s = coll_bytes / LINK_BW
 
     # collective-op count: K chunks per transpose; the pairwise transpose
     # issues (P_axis - 1) ppermutes where the fused path issues one a2a
     comm_sizes = decomp.axis_sizes(axis_sizes)
     n_coll = 0
-    n_stages = transpose_count(decomp, opts)
+    n_stages = transpose_count(decomp, opts, strategy)
     for i, sz in enumerate(comm_sizes):
         # distribute the transposes over the communicators (cell's 8 don't
         # divide by 3 axes evenly; round-robin the remainder)

@@ -33,7 +33,8 @@ def _random_input(shape, dtype, sharding):
 
 def time_forward(plan, *, warmup: int = 2, iters: int = 5) -> float:
     """Median wall seconds per forward transform of a built plan."""
-    x = _random_input(plan.shape, plan.dtype, plan.input_sharding)
+    in_dtype = getattr(plan, "input_dtype", plan.dtype)  # real for r2c plans
+    x = _random_input(plan.shape, in_dtype, plan.input_sharding)
     for _ in range(warmup):
         jax.block_until_ready(plan.forward(x))
     times = []
@@ -54,7 +55,8 @@ def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
     from repro.core.api import Croft3D
     try:
         plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
-                       dtype=jnp.dtype(dtype))
+                       dtype=jnp.dtype(dtype), problem=cand.problem,
+                       strategy=cand.strategy)
         return time_forward(plan, warmup=warmup, iters=iters)
     except Exception:
         return None

@@ -45,9 +45,13 @@ class TuneResult:
     model_s: Optional[float] = None
     measured_s: Optional[float] = None
     wisdom_path: Optional[str] = None
+    problem: str = "c2c"
+    strategy: Optional[str] = None  # r2c: "packed" | "embed"
 
     def summary(self) -> str:
-        best = cand_lib.Candidate(self.decomp, self.opts)
+        best = cand_lib.Candidate(self.decomp, self.opts,
+                                  problem=self.problem,
+                                  strategy=self.strategy)
         t = (f"{self.measured_s * 1e6:.0f}us measured"
              if self.measured_s is not None else
              f"{self.model_s * 1e6:.0f}us modeled"
@@ -67,6 +71,7 @@ def tune(shape: Sequence[int], mesh=None, *,
          axis_sizes: Optional[Mapping[str, int]] = None,
          mode: str = "model", dtype=jnp.complex64, top_k: int = 4,
          wisdom_path: Optional[str] = None, include_baselines: bool = False,
+         heterogeneous_impls: bool = False, problem: str = "c2c",
          measure_iters: int = 5, measure_warmup: int = 2,
          save: bool = True) -> TuneResult:
     """Pick (Decomposition, FFTOptions) for a 3-D FFT problem.
@@ -74,6 +79,12 @@ def tune(shape: Sequence[int], mesh=None, *,
     ``mode="measure"`` requires a live ``mesh``; the other modes accept a
     bare ``axis_sizes`` mapping ({axis_name: size}) and never touch
     devices.
+
+    ``problem="r2c"`` plans the real transform: the search space gains
+    the packed/embed strategy axis (see ``repro.real``), the wisdom key
+    a problem dimension, and measurement runs real-input plans.
+    ``heterogeneous_impls`` widens the search with per-stage
+    ``local_impl`` 3-tuples.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -81,14 +92,16 @@ def tune(shape: Sequence[int], mesh=None, *,
         raise ValueError('mode="measure" needs a live mesh to time on')
     sizes = _resolve_axis_sizes(mesh, axis_sizes)
     backend = jax.default_backend() if mesh is not None else "any"
-    key = wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), backend)
+    key = wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), backend,
+                                problem)
     wis = wisdom_lib.Wisdom.load(wisdom_path)
 
     if mode == "wisdom":
         # fall back to device-less wisdom (backend "any", written by
         # meshless mode="model" tunes) when no backend-exact entry exists
         hit = wis.lookup(key) or wis.lookup(
-            wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), "any"))
+            wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), "any",
+                                  problem))
         if hit is not None:
             try:
                 cand = hit.candidate()
@@ -100,11 +113,13 @@ def tune(shape: Sequence[int], mesh=None, *,
                 ranked=[{"label": cand.label, "model_s": hit.model_s,
                          "measured_s": hit.measured_s}],
                 model_s=hit.model_s, measured_s=hit.measured_s,
-                wisdom_path=wis.path)
+                wisdom_path=wis.path, problem=cand.problem,
+                strategy=cand.strategy)
         mode = "model"  # miss: estimate now, remember below
 
     cands = cand_lib.enumerate_candidates(
-        shape, sizes, include_baselines=include_baselines)
+        shape, sizes, include_baselines=include_baselines,
+        heterogeneous_impls=heterogeneous_impls, problem=problem)
     if not cands:
         raise ValueError(
             f"no valid decomposition for shape={tuple(shape)} over mesh "
@@ -119,10 +134,11 @@ def tune(shape: Sequence[int], mesh=None, *,
             best, "model", model_s=bcost.total_s)
         result = TuneResult(decomp=best.decomp, opts=best.opts,
                             source="model", key=key, ranked=ranked,
-                            model_s=bcost.total_s, wisdom_path=wis.path)
+                            model_s=bcost.total_s, wisdom_path=wis.path,
+                            problem=best.problem, strategy=best.strategy)
     else:  # measure
         pool = [c for c, _ in scored[:max(1, top_k)]]
-        default = cand_lib.default_candidate(shape, sizes)
+        default = cand_lib.default_candidate(shape, sizes, problem=problem)
         if default is not None and default not in pool:
             pool.append(default)
         model_by_cand = {c: b.total_s for c, b in scored}
@@ -153,11 +169,13 @@ def tune(shape: Sequence[int], mesh=None, *,
             from repro.core.api import Croft3D
             entry.hlo = cost_model.hlo_collectives(
                 Croft3D(tuple(shape), mesh, best.decomp, best.opts,
-                        dtype=jnp.dtype(dtype)))
+                        dtype=jnp.dtype(dtype), problem=best.problem,
+                        strategy=best.strategy))
         result = TuneResult(decomp=best.decomp, opts=best.opts,
                             source="measure", key=key, ranked=ranked,
                             model_s=model_by_cand.get(best),
-                            measured_s=best_t, wisdom_path=wis.path)
+                            measured_s=best_t, wisdom_path=wis.path,
+                            problem=best.problem, strategy=best.strategy)
 
     wis.record(key, entry)
     if save and wis.path:

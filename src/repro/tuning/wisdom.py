@@ -4,12 +4,23 @@ A wisdom store is a JSON file mapping problem keys to the winning
 (decomposition, options) plus how the winner was chosen (model score or
 measured seconds).  The key captures everything the plan depends on:
 
-    Nx x Ny x Nz | mesh axis names+sizes | dtype | backend
+    Nx x Ny x Nz | mesh axis names+sizes | dtype | backend [| problem]
 
-so a plan tuned once (e.g. on the job's first process, or in a previous
-run) is reused everywhere the same problem shows up.  ``merge`` keeps the
-better-measured entry on key collisions, so wisdom files can be combined
-across hosts like FFTW wisdom.
+(the problem suffix appears for non-default problem classes, i.e.
+``r2c`` — c2c keys keep the original four-field format so existing
+wisdom files stay valid) so a plan tuned once (e.g. on the job's first
+process, or in a previous run) is reused everywhere the same problem
+shows up.  ``merge`` keeps the better-measured entry on key collisions,
+so wisdom files can be combined across hosts like FFTW wisdom.
+
+Command line (FFTW's ``fftw-wisdom`` tool analogue)::
+
+    python -m repro.tuning.wisdom merge OUT.json [IN.json ...] [--seed]
+    python -m repro.tuning.wisdom show PATH.json
+
+``--seed`` folds in the shipped seed wisdom (``seed_wisdom.json``,
+model-mode plans for common shape/mesh/problem combinations; measured
+entries from your own runs always take precedence on merge).
 """
 
 from __future__ import annotations
@@ -28,16 +39,21 @@ from repro.tuning.candidates import Candidate
 
 WISDOM_VERSION = 1
 DEFAULT_PATH_ENV = "CROFT_WISDOM"
+SEED_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "seed_wisdom.json")
 
 
 def wisdom_key(shape: Sequence[int], axis_sizes: Mapping[str, int],
-               dtype, backend: str) -> str:
+               dtype, backend: str, problem: str = "c2c") -> str:
     shape_s = "x".join(str(int(s)) for s in shape)
     # canonical order: the same problem must hash identically regardless
     # of how the caller ordered the axis mapping
     mesh_s = ",".join(f"{n}={int(s)}"
                       for n, s in sorted(axis_sizes.items()))
-    return f"{shape_s}|{mesh_s}|{np.dtype(dtype).name}|{backend}"
+    key = f"{shape_s}|{mesh_s}|{np.dtype(dtype).name}|{backend}"
+    if problem != "c2c":  # c2c keys keep the legacy four-field format
+        key += f"|{problem}"
+    return key
 
 
 def _listify(axes):
@@ -60,6 +76,8 @@ class WisdomEntry:
     measured_s: Optional[float] = None
     hlo: Optional[dict] = None      # collective stats of the winner
     created: Optional[float] = None
+    problem: str = "c2c"            # "c2c" | "r2c"
+    strategy: Optional[str] = None  # r2c: "packed" | "embed"
 
     def candidate(self) -> Candidate:
         # tolerate opts written by other versions: unknown keys dropped
@@ -67,7 +85,8 @@ class WisdomEntry:
         opts = {k: v for k, v in self.opts.items() if k in known}
         return Candidate(Decomposition(self.decomp_kind,
                                        _tuplify(self.decomp_axes)),
-                         FFTOptions(**opts))
+                         FFTOptions(**opts), problem=self.problem,
+                         strategy=self.strategy)
 
     @classmethod
     def from_candidate(cls, cand: Candidate, source: str,
@@ -78,7 +97,8 @@ class WisdomEntry:
                    decomp_axes=cand.decomp.axes,
                    opts=dataclasses.asdict(cand.opts), source=source,
                    model_s=model_s, measured_s=measured_s, hlo=hlo,
-                   created=time.time())
+                   created=time.time(), problem=cand.problem,
+                   strategy=cand.strategy)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -95,8 +115,13 @@ class WisdomEntry:
     def better_of(self, other: "WisdomEntry") -> "WisdomEntry":
         """Prefer measured over modeled, then the faster measurement.
         Between two unmeasured (model) entries the newer one wins, so
-        cost-model improvements propagate into existing wisdom files."""
+        cost-model improvements propagate into existing wisdom files
+        (and merging an old file back in cannot clobber fresh plans)."""
         mine, theirs = self.measured_s, other.measured_s
+        if mine is None and theirs is None:
+            if (other.created or 0.0) >= (self.created or 0.0):
+                return other
+            return self
         if mine is None:
             return other
         if theirs is None or mine <= theirs:
@@ -162,3 +187,65 @@ class Wisdom:
 
     def __len__(self) -> int:
         return len(self.entries)
+
+
+def load_seed() -> "Wisdom":
+    """The shipped seed wisdom (model-mode plans for common problems).
+
+    Opt-in by design: ``Wisdom.load`` never folds it in automatically, so
+    planner behavior stays a pure function of the caller's wisdom file —
+    use ``python -m repro.tuning.wisdom merge OUT --seed`` (or merge it
+    yourself) to start a cluster's wisdom from the seed.
+    """
+    return Wisdom.load(SEED_PATH) if os.path.exists(SEED_PATH) else Wisdom()
+
+
+# ---------------------------------------------------------------------------
+# command line (the fftw-wisdom analogue)
+# ---------------------------------------------------------------------------
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning.wisdom",
+        description="Inspect and merge CROFT wisdom files.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    mp = sub.add_parser("merge", help="merge wisdom files (better entry "
+                                      "wins per key) into OUT")
+    mp.add_argument("out", help="output wisdom file (merged in place if "
+                                "it already exists)")
+    mp.add_argument("inputs", nargs="*", help="wisdom files to fold in")
+    mp.add_argument("--seed", action="store_true",
+                    help="also fold in the shipped seed wisdom")
+    sp = sub.add_parser("show", help="print a wisdom file's entries")
+    sp.add_argument("path")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "merge":
+        w = Wisdom.load(args.out)
+        w.path = args.out
+        if args.seed:
+            w.merge(load_seed())
+        for p in args.inputs:
+            w.merge(Wisdom.load(p))
+        w.save(args.out)
+        print(f"wrote {len(w)} entries -> {args.out}")
+        return 0
+    w = Wisdom.load(args.path)
+    for key in sorted(w.entries):
+        e = w.entries[key]
+        t = (f"{e.measured_s * 1e6:.0f}us measured" if e.measured_s is not None
+             else f"{e.model_s * 1e6:.0f}us modeled" if e.model_s is not None
+             else "?")
+        try:
+            label = e.candidate().label
+        except (TypeError, ValueError):
+            label = "<unreadable entry>"
+        print(f"{key}\n    [{e.source}] {label} ({t})")
+    print(f"{len(w)} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())
