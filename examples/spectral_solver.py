@@ -19,6 +19,13 @@ measure`` (default) races the model-ranked top candidates on the mesh
 — including the packed/embed strategy axis — ``--tune model`` picks
 analytically with zero execution, and ``--tune wisdom`` reuses a plan
 stored by a previous run (``--wisdom PATH``).
+
+The Poisson solve runs the *fused spectral epilogue*: ``poisson_solve``
+attaches the 1/(-k²) multiply to the forward transform's schedule
+(``Croft3D.forward_filtered`` -> ``Schedule.with_epilogue`` /
+``kernels/spectral_scale.py``), so the whole solve is one forward
+dispatch plus one inverse — no separate pass over the spectrum
+(``benchmarks/rfft_bench.py`` gates this at parity-or-better).
 """
 
 import argparse

@@ -79,7 +79,8 @@ class Croft3D:
         if self.mesh is not None:
             if self.decomp is None:
                 raise ValueError("a mesh requires a Decomposition")
-            self.decomp.validate(self.shape, self.mesh, self.opts.overlap_k)
+            self.decomp.validate(self.shape, self.mesh, self.opts.overlap_k,
+                                 self.opts.transpose_impl)
         if self.problem == "r2c":
             from repro import real as real_lib
             from repro.core import rfft
@@ -151,11 +152,37 @@ class Croft3D:
     def inverse(self, y: jax.Array) -> jax.Array:
         return self._inv(y)
 
+    _fwd_filtered = None
+
+    def forward_filtered(self, x: jax.Array, h: jax.Array,
+                         alpha: float = 1.0) -> jax.Array:
+        """``forward`` with the k-space multiply ``alpha * h`` fused in.
+
+        The multiply rides as a schedule epilogue (c2c: attached to the
+        last stage via ``Schedule.with_epilogue``; packed r2c: fused
+        right after the DC/Nyquist plane unfold) through the
+        ``kernels/spectral_scale.py`` path — one jit dispatch and no
+        extra HBM round trip over the spectrum.  ``h`` must be shaped
+        like ``spectrum_shape`` and placed with ``output_sharding``.
+        """
+        if self._fwd_filtered is None:
+            if self.problem == "r2c":
+                from repro.core import rfft
+                strat = self.strategy
+                self._fwd_filtered = jax.jit(lambda v, hh: rfft.rfft3d(
+                    v, self.mesh, self.decomp, self.opts, strategy=strat,
+                    kspace_filter=hh))
+            else:
+                self._fwd_filtered = jax.jit(lambda v, hh: distributed.fft3d(
+                    v, self.mesh, self.decomp, self.opts, kspace_filter=hh))
+        hh = h if alpha == 1.0 else h * jnp.asarray(alpha, h.dtype)
+        return self._fwd_filtered(x, hh)
+
     # -- autotuning ----------------------------------------------------------
     @classmethod
     def tuned(cls, shape, mesh: Mesh, *, mode: str = "model",
               wisdom_path: Optional[str] = None, dtype=jnp.complex64,
-              problem: str = "c2c", **tune_kw) -> "Croft3D":
+              problem: str = "c2c", batch: int = 1, **tune_kw) -> "Croft3D":
         """Plan via the autotuner (``repro.tuning``) instead of hand-picked
         (decomp, opts).
 
@@ -164,9 +191,13 @@ class Croft3D:
         mesh), ``mode="wisdom"`` reuses a stored plan from
         ``wisdom_path`` (or $CROFT_WISDOM).  ``problem="r2c"`` plans the
         real transform (the planner also chooses the packed/embed
-        strategy).  The chosen plan's provenance is on
-        ``plan.tune_result``.
+        strategy).  ``batch=B`` plans for B vmapped fields: the cost
+        model scales volume terms by B and the wisdom key gains a
+        ``|b{B}`` dimension (B=1 keeps the legacy key format).  The
+        chosen plan's provenance is on ``plan.tune_result``.
         """
+        if batch != 1:
+            tune_kw = dict(tune_kw, batch=batch)
         return cls(tuple(shape), mesh, dtype=jnp.dtype(dtype), tune=mode,
                    problem=problem, wisdom_path=wisdom_path,
                    tune_kw=tune_kw or None)
@@ -177,33 +208,48 @@ class Croft3D:
                                     sharding=self.input_sharding)
         return self._fwd.lower(spec)
 
+    def _forward_schedule(self):
+        """The stage schedule ``forward`` executes (None when meshless) —
+        the tuner's ``cost_model.schedule_for``, so this plan's roofline
+        numbers and the planner's ranking read the identical object
+        (including out-of-body reshards like the embedding's guarded
+        half-slice)."""
+        if self.mesh is None or self.decomp is None:
+            return None
+        from repro.tuning.candidates import Candidate
+        from repro.tuning.cost_model import schedule_for
+        return schedule_for(self.shape, Candidate(
+            self.decomp, self.opts, problem=self.problem,
+            strategy=self.strategy))
+
     def flops_model(self) -> float:
-        """Analytic 5 N log2 N FLOP count for the full 3-D transform
-        (halved for the packed real problem)."""
-        n_total = math.prod(self.shape)
-        logn = sum(math.log2(s) for s in self.shape)
-        flops = 5.0 * n_total * logn
-        if self.problem == "r2c" and self.strategy == "packed":
-            flops *= 0.5
-        return flops
+        """Analytic 5 N log2 N FLOP count for the full 3-D transform,
+        summed over the schedule's local-FFT events (so the packed real
+        pipeline's halved stages are charged at their true sizes)."""
+        sched = self._forward_schedule()
+        if sched is None:
+            n_total = math.prod(self.shape)
+            flops = 5.0 * n_total * sum(math.log2(s) for s in self.shape)
+            if self.problem == "r2c" and self.strategy == "packed":
+                flops *= 0.5
+            return flops
+        sizes = dict(self.mesh.shape)
+        per_device = sum(5.0 * elems * math.log2(n) for _, elems, n
+                         in sched.fft_events(self.shape, sizes))
+        return per_device * self.decomp.n_procs(sizes)
 
     def comm_bytes_model(self) -> float:
-        """Bytes each chip injects per transform (both transposes, natural
-        layout doubles it; paper §4.1 transposes are full-volume shuffles).
-        The packed real pipeline runs two half-volume transposes plus the
-        half-volume z-localizing epilogue reshard."""
-        if self.mesh is None:
+        """Bytes each chip injects per transform: the sum of the
+        schedule's per-stage transpose volumes plus its out-of-body
+        reshards (e.g. the packed pipeline's half-volume z-localizing
+        epilogue) — read from the same ``Schedule`` the executor runs."""
+        sched = self._forward_schedule()
+        if sched is None:
             return 0.0
         itemsize = jnp.dtype(self.dtype).itemsize
-        n_local = math.prod(self.local_shape()) * itemsize
-        if self.problem == "r2c" and self.strategy == "packed":
-            return 1.5 * n_local  # 3 shuffles x half the complex volume
-        n_transposes = {"slab": 1, "pencil": 2, "cell": 3}[self.decomp.kind]
-        if self.opts.output_layout == "natural" and self.decomp.kind != "cell":
-            n_transposes *= 2
-        elif self.decomp.kind == "cell":
-            n_transposes = 4 * 2  # regroup + pencil(2) + scatter, both ways
-        return n_local * n_transposes
+        events = sched.comm_events(self.shape, dict(self.mesh.shape),
+                                   itemsize)
+        return float(sum(ev["bytes"] for ev in events))
 
 
 def auto_pencil(shape: Sequence[int], mesh: Mesh,
@@ -217,10 +263,12 @@ def poisson_solve(rhs: jax.Array, plan: Croft3D, box: float = 2 * math.pi):
 
     Works with both problem classes: a c2c plan sees the full spectrum, an
     r2c plan the Hermitian half (kz from ``rfftfreq``) — the real path
-    demonstrates the packed pipeline's halved round trip.
+    demonstrates the packed pipeline's halved round trip.  The 1/(-k²)
+    multiplier is *fused* into the forward transform as a schedule
+    epilogue (``plan.forward_filtered``): one dispatch, no separate pass
+    over the spectrum.
     """
     nx, ny, nz = plan.shape
-    f_hat = plan.forward(rhs.astype(plan.input_dtype))
     kx = jnp.fft.fftfreq(nx, d=box / (2 * math.pi * nx))
     ky = jnp.fft.fftfreq(ny, d=box / (2 * math.pi * ny))
     if plan.problem == "r2c":
@@ -230,8 +278,9 @@ def poisson_solve(rhs: jax.Array, plan: Croft3D, box: float = 2 * math.pi):
     k2 = (kx[:, None, None] ** 2 + ky[None, :, None] ** 2
           + kz[None, None, :] ** 2)
     inv_k2 = jnp.where(k2 == 0, 0.0, -1.0 / jnp.where(k2 == 0, 1.0, k2))
+    inv_k2 = inv_k2.astype(plan.dtype)
     if plan.mesh is not None:
         inv_k2 = jax.device_put(inv_k2, NamedSharding(
             plan.mesh, plan.output_sharding.spec))
-    u_hat = f_hat * inv_k2.astype(plan.dtype)
+    u_hat = plan.forward_filtered(rhs.astype(plan.input_dtype), inv_k2)
     return plan.inverse(u_hat)

@@ -88,8 +88,22 @@ class Decomposition:
         return P(self.axes[0], self.axes[1], self.axes[2])
 
     def validate(self, shape: Sequence[int], mesh: MeshLike,
-                 overlap_k: int = 1) -> None:
+                 overlap_k: int = 1,
+                 transpose_impl: str = "alltoall") -> None:
         nx, ny, nz = shape[-3], shape[-2], shape[-1]
+        if transpose_impl == "pairwise":
+            # the pairwise (FFTW3 MPI_Sendrecv style) transpose ppermutes
+            # over ONE mesh axis; a folded communicator would otherwise
+            # fail deep inside shard_map with an opaque tracer error
+            if any(isinstance(a, tuple) for a in self.axes):
+                raise ValueError(
+                    "transpose_impl='pairwise' supports single mesh axes "
+                    f"only; {self.kind} decomposition folds {self.axes}")
+            if self.kind == "cell":
+                raise ValueError(
+                    "transpose_impl='pairwise' is incompatible with the "
+                    "cell decomposition: its x-regroup runs the pencil "
+                    "pipeline over a folded (y, x) communicator")
         sizes = self.axis_sizes(mesh)
         if self.kind == "slab":
             (pz,) = sizes
@@ -123,10 +137,11 @@ class Decomposition:
         return NamedSharding(mesh, spec)
 
     def is_valid(self, shape: Sequence[int], mesh: MeshLike,
-                 overlap_k: int = 1) -> bool:
+                 overlap_k: int = 1,
+                 transpose_impl: str = "alltoall") -> bool:
         """Non-raising :meth:`validate` (used by the tuning planner)."""
         try:
-            self.validate(shape, mesh, overlap_k)
+            self.validate(shape, mesh, overlap_k, transpose_impl)
         except (ValueError, KeyError):
             return False
         return True

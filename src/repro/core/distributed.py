@@ -1,5 +1,4 @@
-"""Distributed 3-D FFT: pencil / slab / cell decompositions with K-chunked
-compute-communication overlap (the paper's core contribution, §4-§5).
+"""Distributed 3-D FFT entry points: build a stage schedule, run it.
 
 Mapping from the paper's MPI+OpenMP design to JAX/XLA (DESIGN.md §2):
 
@@ -15,6 +14,17 @@ Mapping from the paper's MPI+OpenMP design to JAX/XLA (DESIGN.md §2):
                                     K=2, paper §5.1).
   FFTW plan reuse               ->  plan-constant caching (plan.py); disabled
                                     = "multiple plans" options 1/3.
+
+Since the schedule refactor the pipeline itself is *data*, not code: the
+pencil / slab / cell bodies are built by ``repro.core.schedule.build_c2c``
+(a pure ``Decomposition -> Schedule`` function), executed by the single
+``schedule.run_schedule`` executor (which owns K-chunked overlap,
+per-stage ``local_impl`` and batch-axis offsetting), and *the same
+objects* are walked by the autotuner's cost model — see ``schedule.py``
+for the IR and the README "Architecture" section for the data flow.
+This module keeps the user-facing knobs (:class:`FFTOptions`) and the
+``shard_map`` wrappers (sharding specs are derived from the schedule's
+symbolic layouts).
 
 The FFTW3 baseline the paper benchmarks against is represented two ways:
 slab decomposition (its scaling model) and ``transpose_impl="pairwise"``
@@ -33,55 +43,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import axis_size, shard_map
+from repro.compat import shard_map
 
 from repro.core import local_fft
+from repro.core import schedule as schedule_lib
 from repro.core.decomposition import Decomposition
 
 AxisName = Union[str, tuple]
 
-
-def _axis_size(axis: AxisName) -> int:
-    """Size of a (possibly folded) mesh axis from inside shard_map."""
-    if isinstance(axis, tuple):
-        return math.prod(axis_size(a) for a in axis)
-    return axis_size(axis)
-
-
-def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
-                concat_axis: int, impl: str = "alltoall") -> jax.Array:
-    """Global transpose along one communicator.
-
-    ``impl="alltoall"``  one fused collective (CROFT's MPI_Alltoall).
-    ``impl="pairwise"``  P-1 ppermute exchanges (FFTW3's MPI_Sendrecv
-                         pattern) — numerically identical, many more
-                         collective ops; used for the figs 12-15 benchmark.
-    """
-    if impl == "alltoall":
-        return jax.lax.all_to_all(blk, axis, split_axis=split_axis,
-                                  concat_axis=concat_axis, tiled=True)
-    if impl != "pairwise":
-        raise ValueError(f"unknown transpose impl {impl!r}")
-    if isinstance(axis, tuple):
-        raise ValueError("pairwise transpose supports single mesh axes only")
-    p = axis_size(axis)
-    idx = jax.lax.axis_index(axis)
-    n_split = blk.shape[split_axis] // p
-    n_cat = blk.shape[concat_axis]
-    out_shape = list(blk.shape)
-    out_shape[split_axis] = n_split
-    out_shape[concat_axis] = n_cat * p
-    out = jnp.zeros(out_shape, blk.dtype)
-    mine = jax.lax.dynamic_slice_in_dim(blk, idx * n_split, n_split, split_axis)
-    out = jax.lax.dynamic_update_slice_in_dim(out, mine, idx * n_cat, concat_axis)
-    for s in range(1, p):
-        perm = [(i, (i + s) % p) for i in range(p)]
-        dest = (idx + s) % p
-        piece = jax.lax.dynamic_slice_in_dim(blk, dest * n_split, n_split, split_axis)
-        recv = jax.lax.ppermute(piece, axis, perm)
-        src = (idx - s) % p
-        out = jax.lax.dynamic_update_slice_in_dim(out, recv, src * n_cat, concat_axis)
-    return out
+# re-exports: the executor primitives moved into the schedule IR but remain
+# addressable here (models/ and older call sites import them from this module)
+_axis_size = schedule_lib._axis_size
+_all_to_all = schedule_lib._all_to_all
+_fft_along = schedule_lib._fft_along
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +76,9 @@ class FFTOptions:
     output_layout  "natural" (paper: restore the input pencil layout with two
                    reverse transposes) | "spectral" (beyond-paper: stay in
                    z-pencil layout, halving collective bytes).
-    transpose_impl "alltoall" | "pairwise" (FFTW3-style emulation).
+    transpose_impl "alltoall" | "pairwise" (FFTW3-style emulation; single
+                   mesh axes only — folded axes and the cell regroup
+                   communicator are rejected by ``Decomposition.validate``).
     """
 
     overlap_k: int = 2
@@ -140,210 +116,108 @@ class FFTOptions:
         return cls(**{**table[opt], **kw})
 
 
-def _fft_along(blk: jax.Array, axis: int, sign: int, opts: FFTOptions,
-               stage: int = 0) -> jax.Array:
-    return local_fft.fft_1d(blk, axis, sign, impl=opts.stage_impl(stage),
-                            plan_cache=opts.plan_cache)
-
-
 def _stage(blk: jax.Array, *, fft_axis: Optional[int], comm_axis: Optional[AxisName],
            split_axis: int, concat_axis: int, chunk_axis: int, sign: int,
            opts: FFTOptions, stage: int = 0) -> jax.Array:
-    """One pipeline stage: local FFT along ``fft_axis`` overlapped with the
-    global transpose over ``comm_axis`` (paper steps {1,2,3}, {5,6,7}).
+    """One ad-hoc pipeline stage (K-chunked FFT -> all_to_all).
 
-    The local block is split into K chunks along ``chunk_axis`` (an axis not
-    involved in the transpose).  Chunk i's all_to_all is independent of chunk
-    i+1's FFT — the overlap the paper implements with its second OpenMP
-    thread, here left to the XLA async-collective scheduler.
-
-    ``stage`` is the pipeline-order index of this 1-D FFT, selecting the
-    per-stage implementation when ``opts.local_impl`` is a 3-tuple.
+    Thin shim over :func:`repro.core.schedule.run_stage` kept for callers
+    that use the CROFT overlap pattern outside a full 3-D schedule
+    (``models/spectral.py`` sequence FFTs, ``models/moe_sharded.py``
+    expert dispatch).
     """
-    k = opts.overlap_k
-    if comm_axis is None:  # final stage: FFT only
-        return _fft_along(blk, fft_axis, sign, opts, stage)
-    if k <= 1 or blk.shape[chunk_axis] % k != 0:
-        y = (_fft_along(blk, fft_axis, sign, opts, stage)
-             if fft_axis is not None else blk)
-        return _all_to_all(y, comm_axis, split_axis, concat_axis,
-                           opts.transpose_impl)
-    chunks = jnp.split(blk, k, axis=chunk_axis)
-    outs = []
-    for c in chunks:
-        y = (_fft_along(c, fft_axis, sign, opts, stage)
-             if fft_axis is not None else c)
-        outs.append(_all_to_all(y, comm_axis, split_axis, concat_axis,
-                                opts.transpose_impl))
-    return jnp.concatenate(outs, axis=chunk_axis)
-
-
-# ---------------------------------------------------------------------------
-# shard_map bodies.  Local block axis order is always (x, y, z).
-# ---------------------------------------------------------------------------
-
-def _pencil_body(blk: jax.Array, *, ax_y: AxisName, ax_z: AxisName, sign: int,
-                 opts: FFTOptions) -> jax.Array:
-    """Forward pencil pipeline, paper §4.1 steps 1-9 (+ optional restore).
-
-    in : x-pencils (Nx, Ny/Py, Nz/Pz)
-    out: natural   -> same layout;  spectral -> z-pencils (Nx/Py, Ny/Pz, Nz)
-    """
-    # steps 1-4: FFT along x, transpose x<->y in the column communicator
-    blk = _stage(blk, fft_axis=0, comm_axis=ax_y, split_axis=0, concat_axis=1,
-                 chunk_axis=2, sign=sign, opts=opts, stage=0)  # (Nx/Py, Ny, Nz/Pz)
-    # steps 5-8: FFT along y, transpose y<->z in the row communicator
-    blk = _stage(blk, fft_axis=1, comm_axis=ax_z, split_axis=1, concat_axis=2,
-                 chunk_axis=0, sign=sign, opts=opts, stage=1)  # (Nx/Py, Ny/Pz, Nz)
-    # step 9: FFT along z
-    blk = _stage(blk, fft_axis=2, comm_axis=None, split_axis=0, concat_axis=0,
-                 chunk_axis=0, sign=sign, opts=opts, stage=2)
-    if opts.output_layout == "spectral":
-        return blk
-    # restore: reverse YZ then XY transposes (paper §5.2, also overlapped)
-    blk = _stage(blk, fft_axis=None, comm_axis=ax_z, split_axis=2, concat_axis=1,
-                 chunk_axis=0, sign=sign, opts=opts)      # (Nx/Py, Ny, Nz/Pz)
-    blk = _stage(blk, fft_axis=None, comm_axis=ax_y, split_axis=1, concat_axis=0,
-                 chunk_axis=2, sign=sign, opts=opts)      # (Nx, Ny/Py, Nz/Pz)
-    return blk
-
-
-def _pencil_body_from_spectral(blk: jax.Array, *, ax_y: AxisName,
-                               ax_z: AxisName, sign: int,
-                               opts: FFTOptions) -> jax.Array:
-    """Reversed pencil pipeline: spectral (z-pencil) input -> natural output.
-
-    Used by the inverse transform when the forward ran with
-    ``output_layout='spectral'`` (beyond-paper path: the forward's two
-    restoring transposes and the inverse's two leading transposes cancel).
-    """
-    # FFT along z while z is local, then hand z back to the row communicator
-    blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=1,
-                 chunk_axis=0, sign=sign, opts=opts, stage=0)  # (Nx/Py, Ny, Nz/Pz)
-    blk = _stage(blk, fft_axis=1, comm_axis=ax_y, split_axis=1, concat_axis=0,
-                 chunk_axis=2, sign=sign, opts=opts, stage=1)  # (Nx, Ny/Py, Nz/Pz)
-    blk = _stage(blk, fft_axis=0, comm_axis=None, split_axis=0, concat_axis=0,
-                 chunk_axis=0, sign=sign, opts=opts, stage=2)
-    return blk
-
-
-def _slab_body_from_spectral(blk: jax.Array, *, ax_z: AxisName, sign: int,
-                             opts: FFTOptions) -> jax.Array:
-    blk = _fft_along(blk, 1, sign, opts, stage=0)
-    blk = _stage(blk, fft_axis=2, comm_axis=ax_z, split_axis=2, concat_axis=0,
-                 chunk_axis=1, sign=sign, opts=opts, stage=1)  # (Nx, Ny, Nz/P)
-    blk = _fft_along(blk, 0, sign, opts, stage=2)
-    return blk
-
-
-def _slab_body(blk: jax.Array, *, ax_z: AxisName, sign: int,
-               opts: FFTOptions) -> jax.Array:
-    """Slab (1-D) pipeline — the FFTW3-MPI scaling model (§2.2.1).
-
-    in: (Nx, Ny, Nz/P) -> local 2-D FFT over (x, y), one global transpose,
-    FFT along z.  P <= Nz is the scaling wall the paper's tables 1/3 show.
-    """
-    blk = _fft_along(blk, 1, sign, opts, stage=0)  # y is free on both layouts
-    blk = _stage(blk, fft_axis=0, comm_axis=ax_z, split_axis=0, concat_axis=2,
-                 chunk_axis=1, sign=sign, opts=opts, stage=1)  # (Nx/P, Ny, Nz)
-    blk = _fft_along(blk, 2, sign, opts, stage=2)
-    if opts.output_layout == "spectral":
-        return blk                                          # z-slabs over x
-    blk = _stage(blk, fft_axis=None, comm_axis=ax_z, split_axis=2, concat_axis=0,
-                 chunk_axis=1, sign=sign, opts=opts)
-    return blk
-
-
-def _cell_body(blk: jax.Array, *, ax_x: AxisName, ax_y: AxisName,
-               ax_z: AxisName, sign: int, opts: FFTOptions) -> jax.Array:
-    """Cell (3-D) pipeline (§2.2.3): regroup to x-pencils over the folded
-    (y, x) communicator, then run the pencil pipeline.
-    """
-    fold_y = (ax_y, ax_x) if not isinstance(ax_y, tuple) else tuple(ax_y) + (ax_x,)
-    # regroup: gather x locally, splitting y further across the x axis
-    blk = _stage(blk, fft_axis=None, comm_axis=ax_x, split_axis=1, concat_axis=0,
-                 chunk_axis=2, sign=sign, opts=opts)  # (Nx, Ny/(Py*Px), Nz/Pz)
-    blk = _pencil_body(blk, ax_y=fold_y, ax_z=ax_z, sign=sign,
-                       opts=dataclasses.replace(opts, output_layout="natural"))
-    # scatter x back out to cells
-    blk = _stage(blk, fft_axis=None, comm_axis=ax_x, split_axis=0, concat_axis=1,
-                 chunk_axis=2, sign=sign, opts=opts)
-    return blk
+    st = schedule_lib.Stage("ad-hoc", fft_axis=fft_axis, comm_axis=comm_axis,
+                            split_axis=split_axis, concat_axis=concat_axis,
+                            chunk_axis=chunk_axis, impl_stage=stage)
+    return schedule_lib.run_stage(blk, st, sign, opts)
 
 
 # ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
 
+def _norm_scale(shape: Sequence[int], sign: int,
+                norm: Optional[str]) -> Optional[float]:
+    """Global normalization factor (None = no scaling at this call)."""
+    nxyz = shape[-3] * shape[-2] * shape[-1]
+    if norm == "ortho":
+        return 1.0 / math.sqrt(nxyz)
+    if (norm is None or norm == "backward") and sign == +1:
+        return 1.0 / nxyz
+    return None
+
+
+def build_schedule(decomp: Decomposition, opts: FFTOptions,
+                   sign: int = -1) -> schedule_lib.Schedule:
+    """The c2c schedule ``distributed_fft3d`` will run for this plan
+    (public hook for golden tests / inspection / the cost model)."""
+    from_spectral = opts.output_layout == "spectral" and sign == +1
+    return schedule_lib.build_c2c(decomp, sign=sign,
+                                  output_layout=opts.output_layout,
+                                  from_spectral=from_spectral)
+
+
 def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
                       sign: int = -1, opts: Optional[FFTOptions] = None,
-                      norm: Optional[str] = None) -> jax.Array:
-    """3-D FFT of a globally-sharded (..., Nx, Ny, Nz) array.
+                      norm: Optional[str] = None,
+                      kspace_filter: Optional[jax.Array] = None) -> jax.Array:
+    """3-D FFT of a globally-sharded (Nx, Ny, Nz) array.
 
-    Leading batch axes are carried along unsharded (the local block sees
-    them; FFT/chunk axis indices below are offset accordingly).
+    Builds the decomposition's :class:`~repro.core.schedule.Schedule` and
+    runs it under ``shard_map``; in/out shardings come from the schedule's
+    symbolic layouts.  ``kspace_filter`` fuses a pointwise k-space
+    multiply into the transform as a terminal schedule epilogue (the
+    filter must be shaped/sharded like the output spectrum).
     """
     if opts is None:
         opts = FFTOptions()
     if x.ndim != 3:
         raise ValueError("distributed_fft3d expects a rank-3 (Nx,Ny,Nz) array; "
                          "vmap for batches")
-    decomp.validate(x.shape, mesh, opts.overlap_k)
+    decomp.validate(x.shape, mesh, opts.overlap_k, opts.transpose_impl)
 
-    # A "spectral"-layout inverse consumes z-pencils and emits the natural
-    # layout (the forward's restoring transposes and the inverse's leading
-    # transposes cancel — that is the point of the optimization).
-    from_spectral = opts.output_layout == "spectral" and sign == +1
-
-    if decomp.kind == "pencil":
-        ax_y, ax_z = decomp.axes
-        fn_body = _pencil_body_from_spectral if from_spectral else _pencil_body
-        body = functools.partial(fn_body, ax_y=ax_y, ax_z=ax_z,
-                                 sign=sign, opts=opts)
-    elif decomp.kind == "slab":
-        (ax_z,) = decomp.axes
-        fn_body = _slab_body_from_spectral if from_spectral else _slab_body
-        body = functools.partial(fn_body, ax_z=ax_z, sign=sign, opts=opts)
-    else:
-        ax_x, ax_y, ax_z = decomp.axes
-        if opts.output_layout == "spectral":
-            raise ValueError("cell decomposition returns natural layout only")
-        body = functools.partial(_cell_body, ax_x=ax_x, ax_y=ax_y, ax_z=ax_z,
-                                 sign=sign, opts=opts)
-
-    if from_spectral:
-        in_spec, out_spec = decomp.spectral_spec(), decomp.partition_spec()
-    else:
-        in_spec = decomp.partition_spec()
-        out_spec = (decomp.partition_spec() if opts.output_layout == "natural"
-                    else decomp.spectral_spec())
+    sched = build_schedule(decomp, opts, sign)
+    if kspace_filter is not None:
+        sched = sched.with_epilogue(schedule_lib.SpectralScale())
+    in_spec = sched.layout_in.partition_spec()
+    out_spec = sched.layout_out.partition_spec()
 
     # normalization uses *global* sizes; fold the scalar in on local blocks
-    nxyz = x.shape[-3] * x.shape[-2] * x.shape[-1]
-    if norm == "ortho":
-        scale = 1.0 / math.sqrt(nxyz)
-    elif (norm is None or norm == "backward") and sign == +1:
-        scale = 1.0 / nxyz
-    else:
-        scale = None
+    scale = _norm_scale(x.shape, sign, norm)
 
-    def wrapped(blk):
-        out = body(blk)
+    def finish(out):
         return out if scale is None else out * jnp.asarray(scale, out.dtype)
 
-    fn = shard_map(wrapped, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
-    return fn(x)
+    if kspace_filter is None:
+        def body1(blk):
+            return finish(schedule_lib.run_schedule(blk, sched, opts))
+        fn = shard_map(body1, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
+        return fn(x)
+
+    def body(blk, h):
+        out = schedule_lib.run_schedule(blk, sched, opts,
+                                        operands={"filter": h})
+        return finish(out)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(in_spec, out_spec),
+                   out_specs=out_spec)
+    return fn(x, kspace_filter.astype(x.dtype))
 
 
 def fft3d(x, mesh=None, decomp=None, opts: Optional[FFTOptions] = None,
-          norm: Optional[str] = None):
+          norm: Optional[str] = None,
+          kspace_filter: Optional[jax.Array] = None):
     """Forward 3-D FFT; single-device fallback when no mesh is given."""
     if opts is None:
         opts = FFTOptions()
     if mesh is None or math.prod(mesh.devices.shape) == 1:
-        return local_fft.fft3d_local(x, -1, impl=opts.local_impl,
-                                     plan_cache=opts.plan_cache, norm=norm)
-    return distributed_fft3d(x, mesh, decomp, -1, opts, norm)
+        y = local_fft.fft3d_local(x, -1, impl=opts.local_impl,
+                                  plan_cache=opts.plan_cache, norm=norm)
+        if kspace_filter is not None:
+            from repro.kernels import spectral_scale as ss
+            y = ss.spectral_scale(y, kspace_filter.astype(y.dtype))
+        return y
+    return distributed_fft3d(x, mesh, decomp, -1, opts, norm, kspace_filter)
 
 
 def ifft3d(x, mesh=None, decomp=None, opts: Optional[FFTOptions] = None,

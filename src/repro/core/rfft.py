@@ -79,13 +79,19 @@ def _guarded_half_slice(y: jax.Array, nz: int, mesh, decomp, opts) -> jax.Array:
 
 def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
            opts: Optional[FFTOptions] = None,
-           strategy: str = "auto") -> jax.Array:
+           strategy: str = "auto", norm: Optional[str] = None,
+           kspace_filter: Optional[jax.Array] = None) -> jax.Array:
     """Real input (Nx, Ny, Nz) -> complex (Nx, Ny, Nz//2 + 1).
 
     Matches ``jnp.fft.rfftn`` with axes in (x, y, z) order (z contiguous,
     halved).  ``strategy``: "packed" | "embed" | "auto" (see module doc).
-    NOTE the packed distributed input layout is z-pencils
-    (``decomp.spectral_spec()``), not the c2c natural layout.
+    ``norm``: None/"backward" (unscaled forward) | "ortho" (1/sqrt(N)).
+    ``kspace_filter`` (shaped like the half spectrum) fuses a k-space
+    multiply into the transform — the packed pipeline applies it right
+    after the DC/Nyquist unfold, inside the same jit.
+    NOTE the packed distributed input layout is the *spectral* layout
+    (``decomp.spectral_spec()``: z-pencils / z-slabs), not the c2c
+    natural layout.
     """
     if opts is None:
         opts = FFTOptions()
@@ -94,12 +100,20 @@ def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
     resolved = real_lib.resolve_strategy(strategy, x.shape, mesh, decomp, opts)
     if resolved == "packed":
         if not _is_multidevice(mesh):
-            return real_lib.local_rfft3d_packed(x, opts)
-        return real_lib.packed_rfft3d(x, mesh, decomp, opts)
-    nz = x.shape[-1]
-    xc = x.astype(jnp.complex64 if x.dtype != jnp.float64 else jnp.complex128)
-    y = distributed.fft3d(xc, mesh, decomp, opts)
-    return _guarded_half_slice(y, nz, mesh, decomp, opts)
+            y = real_lib.local_rfft3d_packed(x, opts, norm=norm)
+        else:
+            return real_lib.packed_rfft3d(x, mesh, decomp, opts, norm=norm,
+                                          kspace_filter=kspace_filter)
+    else:
+        nz = x.shape[-1]
+        xc = x.astype(jnp.complex64 if x.dtype != jnp.float64
+                      else jnp.complex128)
+        y = distributed.fft3d(xc, mesh, decomp, opts, norm=norm)
+        y = _guarded_half_slice(y, nz, mesh, decomp, opts)
+    if kspace_filter is not None:
+        from repro.kernels import spectral_scale as ss
+        y = ss.spectral_scale(y, kspace_filter.astype(y.dtype))
+    return y
 
 
 _negate_freq = _real_packing.negate_freq  # k -> (-k) mod N index map
@@ -108,11 +122,12 @@ _negate_freq = _real_packing.negate_freq  # k -> (-k) mod N index map
 def irfft3d(y: jax.Array, nz: int, mesh=None,
             decomp: Optional[Decomposition] = None,
             opts: Optional[FFTOptions] = None,
-            strategy: str = "auto") -> jax.Array:
+            strategy: str = "auto", norm: Optional[str] = None) -> jax.Array:
     """Inverse of :func:`rfft3d`; reconstructs the Hermitian half.
 
     F[kx, ky, kz] = conj(F[-kx mod Nx, -ky mod Ny, nz - kz]) for the
-    missing bins kz in [nz//2 + 1, nz - 1].
+    missing bins kz in [nz//2 + 1, nz - 1].  ``norm``: None/"backward"
+    (1/N) | "ortho" (1/sqrt(N)), matching :func:`rfft3d`.
     """
     if opts is None:
         opts = FFTOptions()
@@ -120,8 +135,8 @@ def irfft3d(y: jax.Array, nz: int, mesh=None,
     resolved = real_lib.resolve_strategy(strategy, shape, mesh, decomp, opts)
     if resolved == "packed":
         if not _is_multidevice(mesh):
-            return real_lib.local_irfft3d_packed(y, nz, opts)
-        return real_lib.packed_irfft3d(y, nz, mesh, decomp, opts)
+            return real_lib.local_irfft3d_packed(y, nz, opts, norm=norm)
+        return real_lib.packed_irfft3d(y, nz, mesh, decomp, opts, norm=norm)
     body = y[..., 1: (nz + 1) // 2]           # kz' = 1 .. ceil(nz/2)-1
     tail = jnp.conj(body)
     tail = _negate_freq(tail, -3)             # -kx mod Nx
@@ -129,7 +144,7 @@ def irfft3d(y: jax.Array, nz: int, mesh=None,
     tail = jnp.flip(tail, -1)                 # ascending kz = nz-kz' order
     full = jnp.concatenate([y, tail], axis=-1)
     assert full.shape[-1] == nz, (full.shape, nz)
-    x = distributed.ifft3d(full, mesh, decomp, opts)
+    x = distributed.ifft3d(full, mesh, decomp, opts, norm=norm)
     return jnp.real(x)
 
 

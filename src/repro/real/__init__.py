@@ -35,9 +35,10 @@ import jax.numpy as jnp
 
 from repro.core import local_fft
 from repro.core.decomposition import Decomposition
-from repro.core.distributed import FFTOptions
+from repro.core.distributed import FFTOptions, _norm_scale
 from repro.real import packing
-from repro.real.pipeline import (constrain_sharding, packed_irfft3d,
+from repro.real.pipeline import (build_packed_forward, build_packed_inverse,
+                                 constrain_sharding, packed_irfft3d,
                                  packed_rfft3d, packed_unsupported_reason,
                                  real_input_spec, unfold_dc_plane,
                                  fold_dc_plane)
@@ -64,7 +65,8 @@ def packed_local_reason(shape: Sequence[int]) -> Optional[str]:
     return None
 
 
-def local_rfft3d_packed(x: jax.Array, opts: Optional[FFTOptions] = None) -> jax.Array:
+def local_rfft3d_packed(x: jax.Array, opts: Optional[FFTOptions] = None,
+                        norm: Optional[str] = None) -> jax.Array:
     """Single-device packed r2c: real (..., Nx, Ny, Nz) -> (..., Nx, Ny, Nh).
 
     Works for odd Nz too (the fold-free two-for-one keeps all Nh bins —
@@ -89,11 +91,14 @@ def local_rfft3d_packed(x: jax.Array, opts: Optional[FFTOptions] = None) -> jax.
                          plan_cache=opts.plan_cache)
     # the fold stays valid under the (linear) y/x transforms; unfold the
     # DC/Nyquist plane once, at the end, like the distributed pipeline
-    return unfold_dc_plane(S) if fold else S
+    y = unfold_dc_plane(S) if fold else S
+    scale = _norm_scale((nx, ny, nz), -1, norm)
+    return y if scale is None else y * jnp.asarray(scale, y.dtype)
 
 
 def local_irfft3d_packed(y: jax.Array, nz: int,
-                         opts: Optional[FFTOptions] = None) -> jax.Array:
+                         opts: Optional[FFTOptions] = None,
+                         norm: Optional[str] = None) -> jax.Array:
     """Single-device packed c2r: (..., Nx, Ny, Nh) -> real (..., Nx, Ny, Nz)."""
     if opts is None:
         opts = FFTOptions()
@@ -113,7 +118,7 @@ def local_irfft3d_packed(y: jax.Array, nz: int,
     c = local_fft.fft_1d(C, -1, +1, impl=opts.stage_impl(2),
                          plan_cache=opts.plan_cache)
     x = packing.split_pairs(c, pair_axis)
-    return x * jnp.asarray(1.0 / (nx * ny * nz), x.dtype)
+    return x * jnp.asarray(_norm_scale((nx, ny, nz), +1, norm), x.dtype)
 
 
 def unsupported_reason(shape: Sequence[int], mesh, decomp,
@@ -147,7 +152,8 @@ def resolve_strategy(strategy: Optional[str], shape: Sequence[int], mesh,
 
 
 __all__ = [
-    "STRATEGIES", "constrain_sharding", "fold_dc_plane", "local_irfft3d_packed",
+    "STRATEGIES", "build_packed_forward", "build_packed_inverse",
+    "constrain_sharding", "fold_dc_plane", "local_irfft3d_packed",
     "local_rfft3d_packed", "packed_irfft3d", "packed_local_reason",
     "packed_rfft3d", "packed_unsupported_reason", "packing",
     "real_input_spec", "resolve_strategy", "unfold_dc_plane",

@@ -1,36 +1,42 @@
-"""Distributed packed r2c/c2r pipeline (pencil decomposition).
+"""Distributed packed r2c/c2r pipelines (pencil and slab decompositions).
 
 The paper leaves r2c/c2r as future work (§8); this is the native path —
-the embedding fallback lives in ``repro.core.rfft``.  Layouts:
+the embedding fallback lives in ``repro.core.rfft``.  Since the schedule
+refactor the pipelines are *built*, not hardcoded: the functions below
+return :class:`repro.core.schedule.Schedule` objects using the packed
+stage ops (``PackTwo``/``UnpackTwo``/``RepackHalves``/``SplitPairs``),
+and the entry points run them with the same executor as the complex
+transform.  Layouts:
 
-  real input    z-pencils: P(axes[0], axes[1], None) — (Nx/Py, Ny/Pz, Nz)
-                local, z fully local so the r2c stage runs first.  This
-                is ``Decomposition.spectral_spec()``, i.e. the mirror of
-                the c2c pipeline: the real transform *starts* where the
-                complex transform ends.
-  packed        the shard-aligned half spectrum: (Nx, Ny, Nz/2) complex,
-  spectrum      x-pencil sharded P(None, axes[0], axes[1]).  Bin 0 of the
+  real input    the decomposition's *spectral* layout (z fully local so
+                the r2c stage runs first): pencil z-pencils
+                (Nx/Py, Ny/Pz, Nz), slab z-slabs (Nx/P, Ny, Nz).  The
+                real transform starts where the complex transform ends.
+  packed        the shard-aligned half spectrum: (Nx, Ny, Nz/2) complex
+  spectrum      in the decomposition's *natural* layout.  Bin 0 of the
                 z axis carries the (real) DC and Nyquist planes folded
                 into one complex plane (packing.py); bins 1..Nz/2-1 are
                 the true spectrum.
   r2c output    (Nx, Ny, Nz//2 + 1), ``numpy.fft.rfftn``-compatible, in
-                the z-local spectral layout P(axes[0], axes[1], None) —
-                the packed body is resharded once (an all-to-all of the
-                half volume) so the odd-sized Nh axis is never sharded,
-                then one (Nx, Ny)-plane Hermitian reconstruction
-                (``unfold_dc_plane``) splits the folded DC/Nyquist
-                plane.  Keeping Nh local sidesteps the padding/gather
-                pathologies of slicing a sharded z axis (the same
-                choice ``core.rfft._guarded_half_slice`` makes for the
-                embedding) and hands solvers a kz-local spectrum.
+                the z-local spectral layout — the packed body is
+                resharded once (an out-of-body fused all-to-all of the
+                half volume, ``Schedule.extra_comms``) so the odd-sized
+                Nh axis is never sharded, then one (Nx, Ny)-plane
+                Hermitian reconstruction (``unfold_dc_plane``) splits
+                the folded DC/Nyquist plane.
 
-Forward stages (each overlapped with its all_to_all via the K-chunking
-of ``core.distributed._stage``):
+Pencil forward stages (each overlapped with its all_to_all via the
+K-chunking of ``schedule.run_stage``):
 
   1. pack two real z-pencils -> one complex pencil, FFT along z, unpack
      via Hermitian symmetry into the folded half spectrum   [stage 0]
   2. transpose z<->y over axes[1], FFT along y               [stage 1]
   3. transpose y<->x over axes[0], FFT along x               [stage 2]
+
+The slab variant (ROADMAP "packed slab") pairs two x-lines instead —
+local z-rfft, then the y FFT overlapped with the single z<->x transpose
+of the half volume, then the x FFT — covering the 1-axis meshes where
+the tuner previously had to fall back to the embedding.
 
 Every transpose moves half the bytes of the c2c path and the z FFTs run
 on half as many pencils — the ~2x first-stage bandwidth saving the
@@ -44,8 +50,8 @@ two-for-one split/merge is a linear bijection, so c2r(r2c(x)) == ifft
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-import math
 from typing import Mapping, Optional, Sequence, Union
 
 import jax
@@ -53,9 +59,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
 from repro.compat import shard_map
+from repro.core import schedule as schedule_lib
 from repro.core.decomposition import Decomposition, _mesh_axis_sizes
-from repro.core.distributed import FFTOptions, _all_to_all, _fft_along, _stage
+from repro.core.distributed import FFTOptions, _norm_scale
+from repro.core.schedule import (ExtraComm, PackTwo, RepackHalves, Schedule,
+                                 SplitPairs, Stage, UnpackTwo, layout_for)
 from repro.real import packing
+
+#: grid dim two real lines are paired along, per decomposition kind
+PAIR_AXIS = {"pencil": 1, "slab": 0}
 
 
 def packed_unsupported_reason(shape: Sequence[int], decomp: Decomposition,
@@ -66,15 +78,30 @@ def packed_unsupported_reason(shape: Sequence[int], decomp: Decomposition,
     nx, ny, nz = shape[-3], shape[-2], shape[-1]
     if decomp is None:
         return "packed distributed path needs a Decomposition"
-    if decomp.kind != "pencil":
-        return f"packed pipeline supports pencil decomposition, not {decomp.kind}"
+    if decomp.kind not in PAIR_AXIS:
+        return (f"packed pipeline supports pencil and slab decompositions, "
+                f"not {decomp.kind}")
     if nz % 2:
         return f"packed two-for-one needs even Nz, got {nz}"
     try:
         sizes = _mesh_axis_sizes(mesh_or_sizes)
-        py, pz = decomp.axis_sizes(sizes)
+        axis_sizes = decomp.axis_sizes(sizes)
     except (KeyError, TypeError) as e:
         return f"decomposition axes unresolvable on this mesh: {e}"
+    if opts is not None and opts.transpose_impl == "pairwise" and any(
+            isinstance(a, tuple) for a in decomp.axes):
+        return "pairwise transpose supports single mesh axes only"
+    if decomp.kind == "slab":
+        (p,) = axis_sizes
+        if nx % p:
+            return f"Nx={nx} not divisible by P={p} (z-slab input)"
+        if (nx // p) % 2:
+            return (f"local Nx={nx}//{p} is odd — cannot pair two x-lines "
+                    "per complex transform")
+        if (nz // 2) % p:
+            return f"half spectrum Nz/2={nz // 2} not divisible by P={p}"
+        return None
+    py, pz = axis_sizes
     if nx % py:
         return f"Nx={nx} not divisible by Py={py} (z-pencil input)"
     if ny % pz:
@@ -86,50 +113,76 @@ def packed_unsupported_reason(shape: Sequence[int], decomp: Decomposition,
         return f"half spectrum Nz/2={nz // 2} not divisible by Pz={pz}"
     if ny % py:
         return f"Ny={ny} not divisible by Py={py} (y<->x transpose)"
-    if opts is not None and opts.transpose_impl == "pairwise" and any(
-            isinstance(a, tuple) for a in decomp.axes):
-        return "pairwise transpose supports single mesh axes only"
     return None
 
 
 # ---------------------------------------------------------------------------
-# shard_map bodies.  Local axis order is (x, y, z); pairs ride on axis 1.
+# schedule builders.  Local axis order is (x, y, z); pairs ride on
+# PAIR_AXIS[kind].  Input is the real spectral layout, body output the
+# packed natural layout; the z-localizing epilogue reshard is recorded as
+# an out-of-body ExtraComm (one fused all-to-all of the half volume).
 # ---------------------------------------------------------------------------
 
-def _packed_fwd_body(blk: jax.Array, *, ax_y, ax_z, opts: FFTOptions) -> jax.Array:
-    """Real (Nx/Py, Ny/Pz, Nz) z-pencil block -> packed (Nx, Ny/Py, Nz2/Pz)."""
-    use_pallas = opts.stage_impl(0) == "pallas"
+def build_packed_forward(decomp: Decomposition) -> Schedule:
+    """Real spectral-layout block -> packed natural-layout half spectrum."""
+    pair = PAIR_AXIS[decomp.kind]
+    layout_in = layout_for(decomp, "spectral", real=True)
+    if decomp.kind == "pencil":
+        ax_y, ax_z = decomp.axes
+        stages = (
+            Stage("pack+z-rfft+zy", fft_axis=2, impl_stage=0, comm_axis=ax_z,
+                  split_axis=2, concat_axis=1, chunk_axis=0,
+                  prologue=(PackTwo(pair),),
+                  epilogue=(UnpackTwo(pair, impl_stage=0),)),
+            Stage("y-fft+yx", fft_axis=1, impl_stage=1, comm_axis=ax_y,
+                  split_axis=1, concat_axis=0, chunk_axis=2),
+            Stage("x-fft", fft_axis=0, impl_stage=2),
+        )
+    else:  # slab: pair two x-lines, one z<->x transpose of the half volume
+        # (the z-rfft chain overlaps the transpose, K-chunked along the
+        # free y axis; y/x transforms run after, both local then)
+        (ax_z,) = decomp.axes
+        stages = (
+            Stage("pack+z-rfft+zx", fft_axis=2, impl_stage=0, comm_axis=ax_z,
+                  split_axis=2, concat_axis=0, chunk_axis=1,
+                  prologue=(PackTwo(pair),),
+                  epilogue=(UnpackTwo(pair, impl_stage=0),)),
+            Stage("y-fft", fft_axis=1, impl_stage=1),
+            Stage("x-fft", fft_axis=0, impl_stage=2),
+        )
+    sched = Schedule(f"{decomp.kind}/r2c/packed", -1, layout_in, stages)
+    # the epilogue reshard moves the packed (half-volume) body output once
+    return dataclasses.replace(
+        sched, extra_comms=(ExtraComm("z-localize", sched.layout_out),))
 
-    def z_stage(c):
-        p = packing.pack_two(c, pair_axis=1)
-        C = _fft_along(p, 2, -1, opts, stage=0)
-        S = packing.unpack_two(C, pair_axis=1, fold=True, use_pallas=use_pallas)
-        return _all_to_all(S, ax_z, split_axis=2, concat_axis=1,
-                           impl=opts.transpose_impl)
 
-    k = opts.overlap_k
-    if k <= 1 or blk.shape[0] % k:
-        blk = z_stage(blk)                       # (Nx/Py, Ny, Nz2/Pz)
-    else:  # K-chunked along the uninvolved x axis, like core._stage
-        blk = jnp.concatenate(
-            [z_stage(c) for c in jnp.split(blk, k, axis=0)], axis=0)
-    blk = _stage(blk, fft_axis=1, comm_axis=ax_y, split_axis=1, concat_axis=0,
-                 chunk_axis=2, sign=-1, opts=opts, stage=1)  # (Nx, Ny/Py, Nz2/Pz)
-    return _fft_along(blk, 0, -1, opts, stage=2)
-
-
-def _packed_inv_body(blk: jax.Array, *, ax_y, ax_z, nz: int,
-                     opts: FFTOptions) -> jax.Array:
-    """Packed (Nx, Ny/Py, Nz2/Pz) block -> real (Nx/Py, Ny/Pz, Nz)."""
-    blk = _stage(blk, fft_axis=0, comm_axis=ax_y, split_axis=0, concat_axis=1,
-                 chunk_axis=2, sign=+1, opts=opts, stage=0)  # (Nx/Py, Ny, Nz2/Pz)
-    blk = _stage(blk, fft_axis=1, comm_axis=ax_z, split_axis=1, concat_axis=2,
-                 chunk_axis=0, sign=+1, opts=opts, stage=1)  # (Nx/Py, Ny/Pz, Nz2)
-    use_pallas = opts.stage_impl(2) == "pallas"
-    C = packing.repack_halves(blk, pair_axis=1, nz=nz, folded=True,
-                              use_pallas=use_pallas)
-    c = _fft_along(C, 2, +1, opts, stage=2)
-    return packing.split_pairs(c, pair_axis=1)
+def build_packed_inverse(decomp: Decomposition, nz: int) -> Schedule:
+    """Packed natural-layout half spectrum -> real spectral-layout block."""
+    pair = PAIR_AXIS[decomp.kind]
+    layout_in = layout_for(decomp, "natural").with_den(2, mul=2)
+    if decomp.kind == "pencil":
+        ax_y, ax_z = decomp.axes
+        stages = (
+            Stage("x-ifft+xy", fft_axis=0, impl_stage=0, comm_axis=ax_y,
+                  split_axis=0, concat_axis=1, chunk_axis=2),
+            Stage("y-ifft+yz", fft_axis=1, impl_stage=1, comm_axis=ax_z,
+                  split_axis=1, concat_axis=2, chunk_axis=0),
+            Stage("repack+z-ifft+split", fft_axis=2, impl_stage=2,
+                  prologue=(RepackHalves(pair, nz, impl_stage=2),),
+                  epilogue=(SplitPairs(pair),)),
+        )
+    else:
+        (ax_z,) = decomp.axes
+        stages = (
+            Stage("x-ifft+xz", fft_axis=0, impl_stage=0, comm_axis=ax_z,
+                  split_axis=0, concat_axis=2, chunk_axis=1),
+            Stage("y-ifft", fft_axis=1, impl_stage=1),
+            Stage("repack+z-ifft+split", fft_axis=2, impl_stage=2,
+                  prologue=(RepackHalves(pair, nz, impl_stage=2),),
+                  epilogue=(SplitPairs(pair),)),
+        )
+    return Schedule(f"{decomp.kind}/c2r/packed", +1, layout_in, stages,
+                    extra_comms=(ExtraComm("x-localize", layout_in),))
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +238,8 @@ def fold_dc_plane(y: jax.Array, nz: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def real_input_spec(decomp: Decomposition):
-    """PartitionSpec of the packed pipeline's real input (z-pencils)."""
+    """PartitionSpec of the packed pipeline's real input (z-local spectral
+    layout, pencil and slab alike)."""
     return decomp.spectral_spec()
 
 
@@ -198,9 +252,17 @@ def constrain_sharding(y: jax.Array, sharding: NamedSharding) -> jax.Array:
 
 
 def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
-                  opts: Optional[FFTOptions] = None) -> jax.Array:
+                  opts: Optional[FFTOptions] = None,
+                  norm: Optional[str] = None,
+                  kspace_filter: Optional[jax.Array] = None) -> jax.Array:
     """Distributed packed r2c: real (Nx, Ny, Nz) -> (Nx, Ny, Nz//2 + 1)
-    in the z-local spectral layout."""
+    in the z-local spectral layout.
+
+    ``kspace_filter`` (shaped like the output half spectrum) fuses the
+    k-space multiply into the same jit, right after the plane unfold —
+    the "unfolded epilogue" variant that works for any filter, including
+    those with h(kz=0) != h(kz=Nyquist).
+    """
     if opts is None:
         opts = FFTOptions()
     if x.ndim != 3:
@@ -208,19 +270,30 @@ def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
     reason = packed_unsupported_reason(x.shape, decomp, mesh, opts)
     if reason is not None:
         raise ValueError(f"packed r2c unsupported here: {reason}")
-    ax_y, ax_z = decomp.axes
-    body = functools.partial(_packed_fwd_body, ax_y=ax_y, ax_z=ax_z, opts=opts)
-    fn = shard_map(body, mesh=mesh, in_specs=real_input_spec(decomp),
-                   out_specs=decomp.partition_spec())
+    sched = build_packed_forward(decomp)
+    fn = shard_map(
+        functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
+        mesh=mesh, in_specs=sched.layout_in.partition_spec(),
+        out_specs=sched.layout_out.partition_spec())
     out_sharding = NamedSharding(mesh, decomp.spectral_spec())
-    # one half-volume all-to-all brings z local, so the odd-sized Nh axis
-    # stays unsharded and the plane unfold needs no cross-z traffic
+    # one half-volume all-to-all brings z local (the schedule's recorded
+    # ExtraComm), so the odd-sized Nh axis stays unsharded and the plane
+    # unfold needs no cross-z traffic
     packed = constrain_sharding(fn(x), out_sharding)
-    return constrain_sharding(unfold_dc_plane(packed), out_sharding)
+    y = constrain_sharding(unfold_dc_plane(packed), out_sharding)
+    scale = _norm_scale(x.shape, -1, norm)
+    if scale is not None:
+        y = y * jnp.asarray(scale, y.dtype)
+    if kspace_filter is not None:
+        from repro.kernels import spectral_scale as ss
+        y = constrain_sharding(
+            ss.spectral_scale(y, kspace_filter.astype(y.dtype)), out_sharding)
+    return y
 
 
 def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
-                   opts: Optional[FFTOptions] = None) -> jax.Array:
+                   opts: Optional[FFTOptions] = None,
+                   norm: Optional[str] = None) -> jax.Array:
     """Distributed packed c2r: (Nx, Ny, Nz//2 + 1) -> real (Nx, Ny, Nz)."""
     if opts is None:
         opts = FFTOptions()
@@ -231,13 +304,14 @@ def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
     if reason is not None:
         raise ValueError(f"packed c2r unsupported here: {reason}")
     # fold in the z-local layout (mirror of the forward's epilogue); the
-    # shard_map in_specs below reshard the packed body back to x-pencils
+    # shard_map in_specs below reshard the packed body back to the
+    # natural layout (the schedule's recorded ExtraComm)
     y = constrain_sharding(y, NamedSharding(mesh, decomp.spectral_spec()))
     packed = fold_dc_plane(y, nz)
-    ax_y, ax_z = decomp.axes
-    body = functools.partial(_packed_inv_body, ax_y=ax_y, ax_z=ax_z, nz=nz,
-                             opts=opts)
-    fn = shard_map(body, mesh=mesh, in_specs=decomp.partition_spec(),
-                   out_specs=real_input_spec(decomp))
+    sched = build_packed_inverse(decomp, nz)
+    fn = shard_map(
+        functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
+        mesh=mesh, in_specs=sched.layout_in.partition_spec(),
+        out_specs=sched.layout_out.partition_spec())
     x = fn(packed)
-    return x * jnp.asarray(1.0 / (nx * ny * nz), x.dtype)
+    return x * jnp.asarray(_norm_scale((nx, ny, nz), +1, norm), x.dtype)

@@ -13,10 +13,13 @@ mapping directly onto FFTW's planner design:
                         (Decomposition, FFTOptions) pair for (shape, mesh),
                         filtered by divisibility/overlap constraints
   FFTW_ESTIMATE         ``mode="model"`` — ``cost_model.analytic_cost``
-                        ranks candidates from roofline terms (5 N log2 N
-                        flops, HBM passes, transpose bytes, collective
-                        latency) with zero execution; optional HLO-derived
-                        collective counts via ``cost_model.hlo_collectives``
+                        builds the candidate's actual stage schedule
+                        (``repro.core.schedule``, the same object the
+                        executor runs) and walks it: per-stage FFT sizes
+                        and transpose bytes, effective overlap-K,
+                        collective launch counts — with zero execution;
+                        optional HLO-derived collective counts via
+                        ``cost_model.hlo_collectives``
   FFTW_PATIENT          ``mode="measure"`` — ``measure.measure_candidate``
                         compiles and wall-clocks the model-ranked top-k
                         (plus the untuned default) on the live mesh
@@ -29,11 +32,14 @@ mapping directly onto FFTW's planner design:
 
 Problem classes: ``problem="c2c"`` (default) and ``problem="r2c"`` — the
 real transform is a first-class citizen: its candidates carry a
-packed/embed strategy axis (the two-for-one pipeline of ``repro.real``
-vs the embedding fallback), the cost model halves the packed stages'
-roofline terms, measurement runs real-input plans, and wisdom keys gain
-a problem dimension.  ``heterogeneous_impls=True`` additionally searches
-per-stage ``local_impl`` 3-tuples.
+packed/embed strategy axis (the two-for-one pipelines of ``repro.real``,
+pencil and slab alike, vs the embedding fallback), the schedule-derived
+cost model charges the packed stages at their true half-volume sizes,
+measurement runs real-input plans, and wisdom keys gain a problem
+dimension.  ``heterogeneous_impls=True`` additionally searches per-stage
+``local_impl`` 3-tuples, and ``batch=B`` plans for vmapped transforms
+(volume terms scale by B, collective launch counts do not; the wisdom
+key gains ``|b{B}``).
 
 Entry points: :func:`tune` below, ``Croft3D.tuned(...)`` /
 ``Croft3D(..., tune="model")`` in ``repro.core.api``, and the

@@ -135,8 +135,8 @@ def enumerate_candidates(
 
     ``problem="r2c"`` returns real-transform candidates: each valid c2c
     point as an "embed" plan plus a "packed" two-for-one plan where the
-    packed pipeline's constraints hold (pencil decomposition, even
-    divisibility — see ``repro.real.packed_unsupported_reason``).
+    packed pipeline's constraints hold (pencil or slab decomposition,
+    even divisibility — see ``repro.real.packed_unsupported_reason``).
     """
     if problem not in PROBLEMS:
         raise ValueError(f"problem must be one of {PROBLEMS}, got {problem!r}")
@@ -155,7 +155,13 @@ def enumerate_candidates(
                     if include_baselines:
                         variants.append(dict(transpose_impl="alltoall",
                                              plan_cache=False))
-                        if all(not isinstance(a, tuple) for a in dec.axes):
+                        # pairwise ppermutes over ONE mesh axis: folded
+                        # axes and the cell regroup (which runs the pencil
+                        # pipeline over a folded (y, x) communicator) are
+                        # rejected by Decomposition.validate — never emit
+                        # candidates that cannot trace
+                        if dec.kind != "cell" and all(
+                                not isinstance(a, tuple) for a in dec.axes):
                             variants.append(dict(transpose_impl="pairwise",
                                                  plan_cache=True))
                     for var in variants:
@@ -170,10 +176,10 @@ def enumerate_candidates(
 def _realize_r2c(shape, axis_sizes, base: list[Candidate]) -> list[Candidate]:
     """Map a c2c candidate list onto the r2c strategy axis.
 
-    The packed pipeline ignores ``output_layout`` (it always starts from
-    z-pencils and ends in x-pencils, two half transposes total), so the
-    packed variant rides only on the spectral-layout points to avoid
-    duplicate plans.
+    The packed pipelines (pencil and slab) ignore ``output_layout`` (they
+    always start from the z-local spectral layout and never pay restoring
+    transposes), so the packed variant rides only on the spectral-layout
+    points to avoid duplicate plans.
     """
     from repro.real import packed_unsupported_reason
     out: list[Candidate] = []

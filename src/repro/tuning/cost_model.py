@@ -1,31 +1,37 @@
 """Analytic candidate scoring — the planner's FFTW-``ESTIMATE`` leg.
 
 Scores a :class:`~repro.tuning.candidates.Candidate` in modeled seconds
-with zero execution, from the same three roofline terms the launch layer
-uses (``launch/roofline.py`` constants):
+with zero execution.  Since the stage-schedule refactor the model does
+not re-derive pipeline structure from ``Decomposition.kind``: it builds
+the candidate's *actual* :class:`repro.core.schedule.Schedule` (the same
+object the executor runs) and walks it —
 
-  compute     5 N log2 N FLOPs / P, scaled by a per-``local_impl``
-              efficiency prior (the four-step matmul runs on the MXU,
-              Stockham/XLA on the vector units)
-  memory      ~10 local HBM passes over the per-device block
-  collective  transpose traffic / link bandwidth — the slab/pencil/cell
-              counts of ``Croft3D.comm_bytes_model``, halved for the
-              beyond-paper spectral layout
-  latency     a per-collective launch cost; this is what separates one
-              fused all_to_all from the P-1 pairwise exchanges of the
-              FFTW3-style transpose (paper figs 12-15)
+  compute     5 n log2 n FLOPs per local FFT event, at the block size the
+              schedule's symbolic layout reports for that stage, scaled
+              by a per-``local_impl`` efficiency prior (the four-step
+              matmul runs on the MXU, Stockham/XLA on the vector units)
+  memory      ~10 local HBM passes over the per-device input block
+  collective  per-stage transpose bytes (the layout at each stage's
+              all_to_all, so the packed pipeline's half-volume stages and
+              its out-of-body z-localizing reshard are charged at their
+              true sizes) / link bandwidth
+  latency     a per-collective launch cost using each stage's *effective*
+              K (the executor's chunk-indivisible fallback is modeled,
+              and out-of-body reshards count as one fused all-to-all);
+              this is what separates one fused all_to_all from the P-1
+              pairwise exchanges of the FFTW3-style transpose (figs 12-15)
 
 K-chunked overlap (the paper's core mechanism) combines compute and
 collective with ``max(...)`` instead of ``+`` (§5.1 options 3/4), and
 ``plan_cache=False`` pays the twiddle re-materialization the paper's
-options 1/3 measure.
+options 1/3 measure.  The embedding r2c strategy additionally pays the
+guarded half-slice reshard in the natural layout
+(``core.rfft._guarded_half_slice``).
 
-Real-transform candidates (``problem="r2c"``) add a strategy term: the
-packed two-for-one plan halves flops, HBM traffic, and transpose bytes
-(the carried spectrum is Nz/2 bins); the embedding pays full c2c cost
-plus, in the natural layout, the guarded half-slice reshard.  Per-stage
-``local_impl`` tuples score each pipeline stage with its own
-efficiency prior.
+``batch`` models vmapped transforms (B stacked fields): volume terms
+scale by B while collective launch counts do not — under vmap the
+all_to_alls batch into the same ops — which is exactly what makes deeper
+plans win at batch and why the wisdom key carries a ``|b{B}`` dimension.
 
 For compiled refinement, :func:`hlo_collectives` extracts the *actual*
 collective op count/bytes from post-SPMD HLO via ``launch/hlo_cost.py`` —
@@ -41,7 +47,8 @@ from typing import Mapping, Optional, Sequence
 import jax.numpy as jnp
 
 from repro.core.decomposition import Decomposition
-from repro.core.distributed import FFTOptions
+from repro.core.distributed import FFTOptions, build_schedule
+from repro.core.schedule import Schedule
 from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 from repro.tuning.candidates import Candidate
 
@@ -85,89 +92,73 @@ def flops_model(shape: Sequence[int]) -> float:
     return 5.0 * n_total * sum(math.log2(s) for s in shape)
 
 
-def transpose_count(decomp: Decomposition, opts: FFTOptions,
-                    strategy: Optional[str] = None) -> int:
-    """Global transposes per forward transform (matches
-    ``Croft3D.comm_bytes_model``).  The packed real pipeline runs two
-    (half-volume) pipeline transposes plus the z-localizing epilogue
-    reshard (also half volume)."""
-    if strategy == "packed":
-        return 3
-    n = {"slab": 1, "pencil": 2, "cell": 3}[decomp.kind]
-    if decomp.kind == "cell":
-        return 4 * 2  # regroup + pencil(2) + scatter, both ways
-    if opts.output_layout == "natural":
-        n *= 2
-    return n
+def schedule_for(shape: Sequence[int], cand: Candidate) -> Schedule:
+    """The forward schedule this candidate would execute — the single
+    source of stage structure for both the executor and this model
+    (``Croft3D._forward_schedule`` reads it too).
 
-
-def comm_bytes_model(shape: Sequence[int], decomp: Decomposition,
-                     axis_sizes: Mapping[str, int], opts: FFTOptions,
-                     itemsize: int = 8,
-                     strategy: Optional[str] = None) -> float:
-    """Bytes each chip injects per transform."""
-    local = math.prod(decomp.local_shape(shape, axis_sizes)) * itemsize
-    if strategy == "packed":
-        local *= 0.5  # the carried spectrum is Nz/2 complex bins
-    return local * transpose_count(decomp, opts, strategy)
-
-
-def _compute_seconds(shape: Sequence[int], decomp: Decomposition,
-                     opts: FFTOptions, p: int) -> float:
-    """Per-device FFT seconds, honoring per-stage ``local_impl`` tuples.
-
-    Each axis contributes 5 N log2(n_axis) FLOPs; stage order follows the
-    pipeline (slab transforms y first, pencil/cell x first).
+    The r2c embedding's guarded half-slice (``core.rfft``, natural
+    layout only: the odd-sized Nh axis is resharded z-local before
+    slicing) is recorded as an out-of-body ``ExtraComm`` of ~half the
+    spectrum volume, so its bytes and launch are charged like any other
+    collective.
     """
-    n_total = math.prod(shape)
-    order = (1, 0, 2) if decomp.kind == "slab" else (0, 1, 2)
-    total = 0.0
-    for stage, ax in enumerate(order):
-        eff = IMPL_EFFICIENCY.get(opts.stage_impl(stage), _DEFAULT_EFFICIENCY)
-        total += 5.0 * n_total * math.log2(shape[ax]) / p / (PEAK_FLOPS * eff)
-    return total
+    if cand.problem == "r2c" and cand.strategy == "packed":
+        from repro.real import pipeline as real_pipeline
+        return real_pipeline.build_packed_forward(cand.decomp)
+    sched = build_schedule(cand.decomp, cand.opts, sign=-1)
+    if (cand.problem == "r2c" and cand.strategy == "embed"
+            and cand.opts.output_layout == "natural"):
+        from repro.core.schedule import ExtraComm
+        half = sched.layout_out.with_den(2, mul=2)
+        sched = dataclasses.replace(
+            sched, extra_comms=sched.extra_comms
+            + (ExtraComm("guarded-half-slice", half),))
+    return sched
 
 
 def analytic_cost(shape: Sequence[int], cand: Candidate,
                   axis_sizes: Mapping[str, int],
-                  dtype=jnp.complex64) -> CostBreakdown:
+                  dtype=jnp.complex64, batch: int = 1) -> CostBreakdown:
     decomp, opts = cand.decomp, cand.opts
-    strategy = cand.strategy if cand.problem == "r2c" else None
     itemsize = jnp.dtype(dtype).itemsize
     p = decomp.n_procs(axis_sizes)
+    sched = schedule_for(shape, cand)
 
-    flops = flops_model(shape) / p
-    compute_s = _compute_seconds(shape, decomp, opts, p)
-    if strategy == "packed":
-        # two-for-one: half the z transforms, y/x stages on half the bins
-        flops *= 0.5
-        compute_s *= 0.5
+    # compute: one event per local FFT, at the schedule's reported size
+    flops = 0.0
+    compute_s = 0.0
+    for impl_stage, elems, n_fft in sched.fft_events(shape, axis_sizes):
+        f = 5.0 * elems * math.log2(n_fft)
+        flops += f
+        eff = IMPL_EFFICIENCY.get(opts.stage_impl(impl_stage),
+                                  _DEFAULT_EFFICIENCY)
+        compute_s += f / (PEAK_FLOPS * eff)
+    flops *= batch
+    compute_s *= batch
 
-    local_bytes = math.prod(decomp.local_shape(shape, axis_sizes)) * itemsize
-    if strategy == "packed":
-        local_bytes *= 0.5
+    local_bytes = sched.layout_in.bytes(shape, axis_sizes, itemsize) * batch
     memory_s = LOCAL_PASSES * local_bytes / HBM_BW
 
-    coll_bytes = comm_bytes_model(shape, decomp, axis_sizes, opts, itemsize,
-                                  strategy)
-    if strategy == "embed" and opts.output_layout == "natural":
-        # the guarded half-slice reshards ~half the spectrum so the
-        # truncation never crosses shards (core.rfft._guarded_half_slice)
-        coll_bytes += 0.5 * local_bytes
+    events = sched.comm_events(shape, axis_sizes, itemsize)
+    coll_bytes = float(sum(ev["bytes"] for ev in events)) * batch
     collective_s = coll_bytes / LINK_BW
 
-    # collective-op count: K chunks per transpose; the pairwise transpose
-    # issues (P_axis - 1) ppermutes where the fused path issues one a2a
-    comm_sizes = decomp.axis_sizes(axis_sizes)
+    # collective-op count: effective K chunks per in-body transpose (the
+    # executor's chunk-indivisible fallback, read from the schedule); the
+    # pairwise transpose issues (P_axis - 1) ppermutes where the fused
+    # path issues one a2a; out-of-body reshards are one fused a2a each
+    eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
     n_coll = 0
-    n_stages = transpose_count(decomp, opts, strategy)
-    for i, sz in enumerate(comm_sizes):
-        # distribute the transposes over the communicators (cell's 8 don't
-        # divide by 3 axes evenly; round-robin the remainder)
-        per_stage = n_stages // len(comm_sizes) \
-            + (1 if i < n_stages % len(comm_sizes) else 0)
-        ops_per_transpose = (sz - 1) if opts.transpose_impl == "pairwise" else 1
-        n_coll += per_stage * opts.overlap_k * ops_per_transpose
+    k_eff_max = 1
+    for ev in events:
+        if not ev["chunkable"]:
+            n_coll += 1
+            continue
+        k_eff = next(eff_ks)
+        k_eff_max = max(k_eff_max, k_eff)
+        ops = (ev["comm_size"] - 1) if opts.transpose_impl == "pairwise" else 1
+        n_coll += k_eff * ops
     latency_s = n_coll * COLLECTIVE_LATENCY_S
 
     replan_s = 0.0
@@ -175,7 +166,7 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
         replan_s = REPLAN_PASSES * local_bytes / HBM_BW
 
     busy = compute_s + memory_s
-    if opts.overlap_k >= 2:
+    if k_eff_max >= 2:
         # paper §5.1: chunked pipeline hides the smaller of the two legs
         overlapped = max(busy, collective_s) + 0.1 * min(busy, collective_s)
     else:
@@ -191,10 +182,12 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
 
 def rank_candidates(shape: Sequence[int], cands: Sequence[Candidate],
                     axis_sizes: Mapping[str, int],
-                    dtype=jnp.complex64) -> list[tuple[Candidate, CostBreakdown]]:
+                    dtype=jnp.complex64,
+                    batch: int = 1) -> list[tuple[Candidate, CostBreakdown]]:
     """Candidates sorted by modeled total time, cheapest first (stable —
     enumeration order breaks ties, keeping ranking deterministic)."""
-    scored = [(c, analytic_cost(shape, c, axis_sizes, dtype)) for c in cands]
+    scored = [(c, analytic_cost(shape, c, axis_sizes, dtype, batch))
+              for c in cands]
     scored.sort(key=lambda t: t[1].total_s)
     return scored
 

@@ -72,7 +72,7 @@ def tune(shape: Sequence[int], mesh=None, *,
          mode: str = "model", dtype=jnp.complex64, top_k: int = 4,
          wisdom_path: Optional[str] = None, include_baselines: bool = False,
          heterogeneous_impls: bool = False, problem: str = "c2c",
-         measure_iters: int = 5, measure_warmup: int = 2,
+         batch: int = 1, measure_iters: int = 5, measure_warmup: int = 2,
          save: bool = True) -> TuneResult:
     """Pick (Decomposition, FFTOptions) for a 3-D FFT problem.
 
@@ -85,6 +85,12 @@ def tune(shape: Sequence[int], mesh=None, *,
     a problem dimension, and measurement runs real-input plans.
     ``heterogeneous_impls`` widens the search with per-stage
     ``local_impl`` 3-tuples.
+
+    ``batch`` plans for B vmapped fields: the cost model scales volume
+    terms (not collective launch counts) by B and the wisdom key gains a
+    ``|b{B}`` dimension (``batch=1`` keeps the legacy key format, so old
+    wisdom files still hit).  Measurement times the B=1 transform — the
+    model ranking is what shifts with batch.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -93,7 +99,7 @@ def tune(shape: Sequence[int], mesh=None, *,
     sizes = _resolve_axis_sizes(mesh, axis_sizes)
     backend = jax.default_backend() if mesh is not None else "any"
     key = wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), backend,
-                                problem)
+                                problem, batch)
     wis = wisdom_lib.Wisdom.load(wisdom_path)
 
     if mode == "wisdom":
@@ -101,7 +107,7 @@ def tune(shape: Sequence[int], mesh=None, *,
         # meshless mode="model" tunes) when no backend-exact entry exists
         hit = wis.lookup(key) or wis.lookup(
             wisdom_lib.wisdom_key(shape, sizes, jnp.dtype(dtype), "any",
-                                  problem))
+                                  problem, batch))
         if hit is not None:
             try:
                 cand = hit.candidate()
@@ -124,7 +130,7 @@ def tune(shape: Sequence[int], mesh=None, *,
         raise ValueError(
             f"no valid decomposition for shape={tuple(shape)} over mesh "
             f"axes {dict(sizes)} — check divisibility")
-    scored = cost_model.rank_candidates(shape, cands, sizes, dtype)
+    scored = cost_model.rank_candidates(shape, cands, sizes, dtype, batch)
     ranked = [{"label": c.label, "model_s": b.total_s,
                "cost": b.to_dict()} for c, b in scored]
 

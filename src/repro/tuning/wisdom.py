@@ -44,7 +44,8 @@ SEED_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 
 def wisdom_key(shape: Sequence[int], axis_sizes: Mapping[str, int],
-               dtype, backend: str, problem: str = "c2c") -> str:
+               dtype, backend: str, problem: str = "c2c",
+               batch: int = 1) -> str:
     shape_s = "x".join(str(int(s)) for s in shape)
     # canonical order: the same problem must hash identically regardless
     # of how the caller ordered the axis mapping
@@ -53,6 +54,9 @@ def wisdom_key(shape: Sequence[int], axis_sizes: Mapping[str, int],
     key = f"{shape_s}|{mesh_s}|{np.dtype(dtype).name}|{backend}"
     if problem != "c2c":  # c2c keys keep the legacy four-field format
         key += f"|{problem}"
+    if batch != 1:  # unbatched keys keep the legacy format (= b1), so
+        key += f"|b{int(batch)}"  # wisdom written before the batch
+        # dimension existed still hits for batch=1 problems
     return key
 
 

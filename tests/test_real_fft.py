@@ -93,6 +93,23 @@ def test_c2r_non_hermitian_input_matches_irfftn(nz, rng):
                                    err_msg=strat)
 
 
+@pytest.mark.parametrize("norm", ["ortho", "backward", None])
+def test_local_norm_roundtrips(norm, rng):
+    """r2c norm semantics match numpy on both strategies (satellite:
+    normalization coverage)."""
+    x = rng.randn(8, 8, 16).astype(np.float32)
+    np_norm = norm if norm is not None else "backward"
+    ref = np.fft.rfftn(x, norm=np_norm)
+    for strat in ("packed", "embed"):
+        y = np.asarray(rfft3d(jnp.asarray(x), strategy=strat, norm=norm))
+        np.testing.assert_allclose(y, ref, atol=3e-5 * np.abs(ref).max(),
+                                   err_msg=f"{strat}/{norm}")
+        xb = np.asarray(irfft3d(jnp.asarray(y), 16, strategy=strat,
+                                norm=norm))
+        np.testing.assert_allclose(xb, x, atol=2e-5,
+                                   err_msg=f"{strat}/{norm}")
+
+
 # --- packing primitives ------------------------------------------------------
 
 def test_pack_unpack_two_for_one_identity(rng):
@@ -179,10 +196,13 @@ def test_candidates_stagewise_and_r2c():
     strategies = {c.strategy for c in r2c}
     assert strategies == {"packed", "embed"}
     assert all(c.problem == "r2c" for c in r2c)
-    # packed candidates only where the pipeline supports them
+    # packed candidates only where the pipelines support them — pencil
+    # (pair z-pencils) and, since the schedule refactor, slab (pair
+    # x-lines); this divisible 32^3 problem must offer both
+    packed_kinds = {c.decomp.kind for c in r2c if c.strategy == "packed"}
+    assert packed_kinds == {"pencil", "slab"}
     for c in r2c:
         if c.strategy == "packed":
-            assert c.decomp.kind == "pencil"
             assert real_lib.packed_unsupported_reason(
                 (32, 32, 32), c.decomp, SIZES, c.opts) is None
 
@@ -357,6 +377,63 @@ yc = cplan.forward(jax.device_put(jnp.asarray(xc), cplan.input_sharding))
 err = np.abs(np.asarray(yc) - np.fft.rfftn(xc)).max()
 assert err < 1e-4, err
 print("OK cell r2c + z-local output sharding")
+""", timeout=900)
+
+
+def test_distributed_packed_slab_and_norm():
+    """The packed-slab strategy (pair x-lines, one half-volume z<->x
+    transpose) on a 1-axis mesh: numpy parity, exact inverse, norm
+    round trips, and the auto-resolution picking it."""
+    run_multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import Croft3D, Decomposition, FFTOptions
+from repro.core.rfft import rfft3d, irfft3d
+from jax.sharding import NamedSharding
+rng = np.random.RandomState(5)
+N = 32
+mesh = jax.make_mesh((8,), ("p",), axis_types=(jax.sharding.AxisType.Auto,))
+dec = Decomposition("slab", ("p",))
+x = rng.randn(N, N, N).astype(np.float32)
+ref = np.fft.rfftn(x)
+plan = Croft3D((N,N,N), mesh, dec, FFTOptions(), problem="r2c")
+assert plan.strategy == "packed"   # auto resolves to the slab pipeline
+xd = jax.device_put(jnp.asarray(x), plan.input_sharding)
+y = plan.forward(xd)
+err = float(jnp.max(jnp.abs(y - ref))) / np.abs(ref).max()
+xb = plan.inverse(y)
+rerr = float(jnp.max(jnp.abs(xb - x)))
+assert err < 1e-5, err
+assert rerr < 1e-4, rerr
+print("OK packed-slab", err, rerr)
+# K=1 and per-stage impls
+for opts, tag in [(FFTOptions(overlap_k=1), "k1"),
+                  (FFTOptions(local_impl=("matmul","stockham","xla")),
+                   "stagewise")]:
+    p2 = Croft3D((N,N,N), mesh, dec, opts, problem="r2c", strategy="packed")
+    y2 = p2.forward(jax.device_put(jnp.asarray(x), p2.input_sharding))
+    e2 = float(jnp.max(jnp.abs(y2 - ref))) / np.abs(ref).max()
+    assert e2 < 1e-4, (tag, e2)
+    print("OK packed-slab", tag, e2)
+# norm round trips through the distributed packed pipelines
+sh = NamedSharding(mesh, dec.spectral_spec())
+for norm in ("ortho", "backward"):
+    yn = rfft3d(jax.device_put(jnp.asarray(x), sh), mesh, dec,
+                FFTOptions(), strategy="packed", norm=norm)
+    refn = np.fft.rfftn(x, norm=norm)
+    en = float(jnp.max(jnp.abs(yn - refn))) / np.abs(refn).max()
+    xn = irfft3d(yn, N, mesh, dec, FFTOptions(), strategy="packed",
+                 norm=norm)
+    rn = float(jnp.max(jnp.abs(xn - x)))
+    assert en < 1e-5 and rn < 1e-4, (norm, en, rn)
+    print("OK packed-slab norm", norm, en, rn)
+# unpairable local Nx is rejected with a reason
+try:
+    Croft3D((8, N, N), mesh, dec, FFTOptions(), problem="r2c",
+            strategy="packed")
+    raise SystemExit("packed-slab should reject Nx/P == 1")
+except ValueError as e:
+    assert "pair" in str(e)
+    print("OK packed-slab rejection:", e)
 """, timeout=900)
 
 
