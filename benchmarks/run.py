@@ -5,9 +5,11 @@ CSV rows (derived=0: measured on this host; 1: modeled from compiled
 artifacts / roofline constants — no TPU in this container).
 
 ``--smoke`` runs only the fast sweeps — the autotuner
-(``benchmarks.tuning_bench``) and the real-transform packed-vs-embed
-comparison (``benchmarks.rfft_bench``) — the CI path exercising the
-planner and the r2c pipeline end to end on every push.
+(``benchmarks.tuning_bench``), the real-transform packed-vs-embed
+comparison (``benchmarks.rfft_bench``), and the transpose overlap-engine
+sweep (``benchmarks.overlap_bench``) — the CI path exercising the
+planner, the r2c pipeline, and all three transpose impls end to end on
+every push.
 """
 
 import argparse
@@ -17,7 +19,7 @@ import traceback
 FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.kernel_micro", "benchmarks.lm_roofline",
                 "benchmarks.train_bench", "benchmarks.tuning_bench",
-                "benchmarks.rfft_bench"]
+                "benchmarks.rfft_bench", "benchmarks.overlap_bench"]
 
 
 def main() -> None:
@@ -29,9 +31,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     if args.smoke:
-        from benchmarks import rfft_bench, tuning_bench
+        from benchmarks import overlap_bench, rfft_bench, tuning_bench
         tuning_bench.run(smoke=True)
         rfft_bench.run(smoke=True)
+        overlap_bench.run(smoke=True)
         return
     for modname in FULL_MODULES:
         try:

@@ -192,9 +192,10 @@ class Croft3D:
         ``wisdom_path`` (or $CROFT_WISDOM).  ``problem="r2c"`` plans the
         real transform (the planner also chooses the packed/embed
         strategy).  ``batch=B`` plans for B vmapped fields: the cost
-        model scales volume terms by B and the wisdom key gains a
-        ``|b{B}`` dimension (B=1 keeps the legacy key format).  The
-        chosen plan's provenance is on ``plan.tune_result``.
+        model scales volume terms by B, ``mode="measure"`` times the
+        *vmapped* transform over B stacked fields, and the wisdom key
+        gains a ``|b{B}`` dimension (B=1 keeps the legacy key format).
+        The chosen plan's provenance is on ``plan.tune_result``.
         """
         if batch != 1:
             tune_kw = dict(tune_kw, batch=batch)

@@ -91,19 +91,21 @@ class Decomposition:
                  overlap_k: int = 1,
                  transpose_impl: str = "alltoall") -> None:
         nx, ny, nz = shape[-3], shape[-2], shape[-1]
-        if transpose_impl == "pairwise":
-            # the pairwise (FFTW3 MPI_Sendrecv style) transpose ppermutes
-            # over ONE mesh axis; a folded communicator would otherwise
-            # fail deep inside shard_map with an opaque tracer error
+        if transpose_impl in ("pairwise", "ring"):
+            # both ppermute-based transposes (ring pipeline, FFTW3-style
+            # MPI_Sendrecv emulation) exchange over ONE mesh axis; a
+            # folded communicator would otherwise fail deep inside
+            # shard_map with an opaque tracer error
             if any(isinstance(a, tuple) for a in self.axes):
                 raise ValueError(
-                    "transpose_impl='pairwise' supports single mesh axes "
-                    f"only; {self.kind} decomposition folds {self.axes}")
+                    f"transpose_impl='{transpose_impl}' supports single "
+                    f"mesh axes only; {self.kind} decomposition folds "
+                    f"{self.axes}")
             if self.kind == "cell":
                 raise ValueError(
-                    "transpose_impl='pairwise' is incompatible with the "
-                    "cell decomposition: its x-regroup runs the pencil "
-                    "pipeline over a folded (y, x) communicator")
+                    f"transpose_impl='{transpose_impl}' is incompatible "
+                    "with the cell decomposition: its x-regroup runs the "
+                    "pencil pipeline over a folded (y, x) communicator")
         sizes = self.axis_sizes(mesh)
         if self.kind == "slab":
             (pz,) = sizes

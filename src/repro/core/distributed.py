@@ -5,13 +5,21 @@ Mapping from the paper's MPI+OpenMP design to JAX/XLA (DESIGN.md §2):
   row/column MPI communicators  ->  mesh axes inside ``shard_map``
   MPI_Alltoall                  ->  ``jax.lax.all_to_all`` (split/concat axes
                                     express the pack/unpack steps 2,4,6,8)
-  OpenMP comm thread + K chunks ->  K independent (FFT chunk -> all_to_all)
-                                    chains; chunk i's collective has no data
-                                    dependence on chunk i+1's FFT, so XLA's
-                                    async collective scheduler overlaps them.
-                                    K=1 reproduces options 1/2 (no overlap),
-                                    K>=2 reproduces options 3/4 (CROFT default
-                                    K=2, paper §5.1).
+  OpenMP comm thread + K chunks ->  K independent (FFT chunk -> transpose)
+                                    chains, emitted as a depth-1 software
+                                    pipeline (``overlap_mode="pipelined"``:
+                                    chunk i+1's FFT precedes chunk i's
+                                    collective in program order, so overlap
+                                    is structural, not a scheduling
+                                    accident).  K=1 reproduces options 1/2
+                                    (no overlap), K>=2 options 3/4 (CROFT
+                                    default K=2, paper §5.1).
+                                    ``transpose_impl="ring"`` additionally
+                                    decomposes each transpose into P-1
+                                    independent ppermute rounds with fused
+                                    Pallas pack/unpack
+                                    (``kernels/transpose_pack.py``) — the
+                                    explicit pack->send->unpack pipeline.
   FFTW plan reuse               ->  plan-constant caching (plan.py); disabled
                                     = "multiple plans" options 1/3.
 
@@ -28,8 +36,10 @@ symbolic layouts).
 
 The FFTW3 baseline the paper benchmarks against is represented two ways:
 slab decomposition (its scaling model) and ``transpose_impl="pairwise"``
-(its communication pattern: P-1 pairwise exchanges standing in for
-MPI_Sendrecv, reproducing the "864 calls vs 64 calls" profile of figs 12-15).
+(its communication pattern: P-1 *blocking* sendrecv exchanges placed
+through a serial chain, reproducing the "864 calls vs 64 calls" profile
+of figs 12-15).  ``benchmarks/overlap_bench.py`` sweeps all three
+transpose impls x K and gates ring at parity-or-better.
 """
 
 from __future__ import annotations
@@ -76,9 +86,21 @@ class FFTOptions:
     output_layout  "natural" (paper: restore the input pencil layout with two
                    reverse transposes) | "spectral" (beyond-paper: stay in
                    z-pencil layout, halving collective bytes).
-    transpose_impl "alltoall" | "pairwise" (FFTW3-style emulation; single
-                   mesh axes only — folded axes and the cell regroup
-                   communicator are rejected by ``Decomposition.validate``).
+    transpose_impl "alltoall" (one fused collective) | "ring" (P-1
+                   independent ppermute rounds with fused Pallas
+                   pack/unpack — the explicit overlap pipeline) |
+                   "pairwise" (FFTW3-style serial-chain emulation).
+                   ring/pairwise ppermute over single mesh axes only —
+                   folded axes and the cell regroup communicator are
+                   rejected by ``Decomposition.validate``.
+    overlap_mode   how K >= 2 chunks are emitted: "pipelined" (staged
+                   software pipeline — chunk i+1's FFT precedes chunk
+                   i's collective in program order, the explicit overlap
+                   engine) | "unrolled" (legacy chunk-after-chunk
+                   emission, overlap left to XLA's async scheduler); or
+                   a 3-tuple of those, one per pipeline stage (indexed
+                   like ``local_impl``).  Both orders run identical ops,
+                   so results are bitwise equal.
     """
 
     overlap_k: int = 2
@@ -86,23 +108,36 @@ class FFTOptions:
     local_impl: Union[str, tuple] = "matmul"
     output_layout: str = "natural"
     transpose_impl: str = "alltoall"
+    overlap_mode: Union[str, tuple] = "pipelined"
+
+    TRANSPOSE_IMPLS = ("alltoall", "ring", "pairwise")
+    OVERLAP_MODES = ("pipelined", "unrolled")
 
     def __post_init__(self):
-        li = self.local_impl
-        if isinstance(li, (list, tuple)):
-            li = tuple(li)
-            if len(li) != 3:
-                raise ValueError(
-                    f"per-stage local_impl needs exactly 3 entries, got {li}")
-            if len(set(li)) == 1:
-                li = li[0]
-            object.__setattr__(self, "local_impl", li)
+        object.__setattr__(self, "local_impl",
+                           _canon_stage_tuple("local_impl", self.local_impl))
+        om = _canon_stage_tuple("overlap_mode", self.overlap_mode)
+        for m in (om if isinstance(om, tuple) else (om,)):
+            if m not in self.OVERLAP_MODES:
+                raise ValueError(f"overlap_mode must be one of "
+                                 f"{self.OVERLAP_MODES}, got {m!r}")
+        object.__setattr__(self, "overlap_mode", om)
+        if self.transpose_impl not in self.TRANSPOSE_IMPLS:
+            raise ValueError(f"transpose_impl must be one of "
+                             f"{self.TRANSPOSE_IMPLS}, got "
+                             f"{self.transpose_impl!r}")
 
     def stage_impl(self, stage: int) -> str:
         """Local 1-D implementation for the given pipeline stage."""
         if isinstance(self.local_impl, tuple):
             return self.local_impl[stage]
         return self.local_impl
+
+    def stage_overlap(self, stage: int) -> str:
+        """Chunk emission mode for the given pipeline stage."""
+        if isinstance(self.overlap_mode, tuple):
+            return self.overlap_mode[stage]
+        return self.overlap_mode
 
     @classmethod
     def paper_option(cls, opt: int, **kw) -> "FFTOptions":
@@ -114,6 +149,19 @@ class FFTOptions:
             4: dict(overlap_k=2, plan_cache=True),  # shipped CROFT
         }
         return cls(**{**table[opt], **kw})
+
+
+def _canon_stage_tuple(name: str, value: Union[str, tuple]) -> Union[str, tuple]:
+    """Canonicalize a per-stage knob: 3-tuples collapse to their single
+    value when homogeneous (the canonical form for wisdom keys)."""
+    if isinstance(value, (list, tuple)):
+        value = tuple(value)
+        if len(value) != 3:
+            raise ValueError(
+                f"per-stage {name} needs exactly 3 entries, got {value}")
+        if len(set(value)) == 1:
+            value = value[0]
+    return value
 
 
 def _stage(blk: jax.Array, *, fft_axis: Optional[int], comm_axis: Optional[AxisName],

@@ -517,69 +517,157 @@ def _fft_along(blk: jax.Array, axis: int, sign: int, opts,
                             plan_cache=opts.plan_cache)
 
 
+def _pack_pieces(blk: jax.Array, axis: AxisName, split_axis: int) -> list:
+    """Rotated-block pack shared by the ring and pairwise transposes.
+
+    One fused pass (``kernels/transpose_pack.rotate_blocks``) rotates the
+    P send blocks of ``split_axis`` by this rank's index, after which
+    piece s — the block bound for rank ``(idx + s) % P`` — is a *static*
+    slice, replacing the per-round ``dynamic_slice`` of the old path.
+    """
+    from repro.kernels import transpose_pack
+    p = axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    return transpose_pack.pack_pieces(blk, split_axis, idx, p)
+
+
+def _ring_transpose(blk: jax.Array, axis: AxisName, split_axis: int,
+                    concat_axis: int) -> jax.Array:
+    """P-1-round ring transpose: pack -> send -> unpack, no serial chain.
+
+    The rounds are structurally independent (each ppermute consumes its
+    own packed piece and feeds only the final concatenate), so XLA's
+    async scheduler — and the staged chunk pipeline of
+    :func:`run_stage` — can run round s's send while other rounds pack
+    or other chunks run their local FFTs: the explicit form of the
+    paper's dedicated communication thread, and the pack->send->unpack
+    pipeline of Verma et al.'s multi-node GPU FFT.  Received pieces are
+    reassembled with one fused rotation instead of the P-1 full-size
+    ``dynamic_update_slice`` writes the pairwise emulation pays.
+    """
+    from repro.kernels import transpose_pack
+    p = axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    pieces = _pack_pieces(blk, axis, split_axis)
+    recv = [pieces[0]]                      # round 0: my own block, no comm
+    for s in range(1, p):
+        perm = [(i, (i + s) % p) for i in range(p)]
+        recv.append(jax.lax.ppermute(pieces[s], axis, perm))
+    # concat order [round 0, round P-1, ..., round 1] puts the piece from
+    # src (idx + m) % P at block m; rotating by -idx restores src order.
+    ordered = [recv[0]] + recv[:0:-1]
+    return transpose_pack.unpack_pieces(ordered, concat_axis, -idx)
+
+
+def _pairwise_transpose(blk: jax.Array, axis: AxisName, split_axis: int,
+                        concat_axis: int) -> jax.Array:
+    """FFTW3-style emulation: P-1 *blocking* sendrecv rounds — round
+    s+1's exchange is ordered after round s's completes (an
+    ``optimization_barrier``, the data-flow form of MPI_Sendrecv's
+    blocking semantics), and each received piece lands through a serial
+    ``dynamic_update_slice`` chain.  Numerically identical to the other
+    impls; this is the baseline whose serialized rounds the ring
+    pipeline exists to avoid (figs 12-15).  The send side shares the
+    fused rotated pack."""
+    p = axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    n_cat = blk.shape[concat_axis]
+    pieces = _pack_pieces(blk, axis, split_axis)
+    out_shape = list(blk.shape)
+    out_shape[split_axis] = pieces[0].shape[split_axis]
+    out_shape[concat_axis] = n_cat * p
+    out = jnp.zeros(out_shape, blk.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, pieces[0], idx * n_cat,
+                                              concat_axis)
+    for s in range(1, p):
+        perm = [(i, (i + s) % p) for i in range(p)]
+        recv = jax.lax.ppermute(pieces[s], axis, perm)
+        if s + 1 < p:
+            # blocking round: the next send may not start until this
+            # round's receive has completed
+            pieces[s + 1], _ = jax.lax.optimization_barrier(
+                (pieces[s + 1], recv))
+        src = (idx - s) % p
+        out = jax.lax.dynamic_update_slice_in_dim(out, recv, src * n_cat,
+                                                  concat_axis)
+    return out
+
+
 def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
                 concat_axis: int, impl: str = "alltoall") -> jax.Array:
     """Global transpose along one communicator.
 
     ``impl="alltoall"``  one fused collective (CROFT's MPI_Alltoall).
-    ``impl="pairwise"``  P-1 ppermute exchanges (FFTW3's MPI_Sendrecv
-                         pattern) — numerically identical, many more
-                         collective ops; used for the figs 12-15 benchmark.
+    ``impl="ring"``      P-1 independent ppermute rounds with fused
+                         Pallas pack/unpack — the explicit overlap
+                         pipeline (see :func:`_ring_transpose`).
+    ``impl="pairwise"``  P-1 ppermute exchanges through a serial update
+                         chain (FFTW3's MPI_Sendrecv pattern) —
+                         numerically identical, many more collective
+                         ops; used for the figs 12-15 benchmark.
     """
     if impl == "alltoall":
         return jax.lax.all_to_all(blk, axis, split_axis=split_axis,
                                   concat_axis=concat_axis, tiled=True)
-    if impl != "pairwise":
+    if impl not in ("ring", "pairwise"):
         raise ValueError(f"unknown transpose impl {impl!r}")
     if isinstance(axis, tuple):
-        raise ValueError("pairwise transpose supports single mesh axes only")
-    p = axis_size(axis)
-    idx = jax.lax.axis_index(axis)
-    n_split = blk.shape[split_axis] // p
-    n_cat = blk.shape[concat_axis]
-    out_shape = list(blk.shape)
-    out_shape[split_axis] = n_split
-    out_shape[concat_axis] = n_cat * p
-    out = jnp.zeros(out_shape, blk.dtype)
-    mine = jax.lax.dynamic_slice_in_dim(blk, idx * n_split, n_split, split_axis)
-    out = jax.lax.dynamic_update_slice_in_dim(out, mine, idx * n_cat, concat_axis)
-    for s in range(1, p):
-        perm = [(i, (i + s) % p) for i in range(p)]
-        dest = (idx + s) % p
-        piece = jax.lax.dynamic_slice_in_dim(blk, dest * n_split, n_split, split_axis)
-        recv = jax.lax.ppermute(piece, axis, perm)
-        src = (idx - s) % p
-        out = jax.lax.dynamic_update_slice_in_dim(out, recv, src * n_cat, concat_axis)
-    return out
+        raise ValueError(f"{impl} transpose supports single mesh axes only")
+    if impl == "ring":
+        return _ring_transpose(blk, axis, split_axis, concat_axis)
+    return _pairwise_transpose(blk, axis, split_axis, concat_axis)
 
 
 def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
               ctx=None) -> jax.Array:
     """Execute one stage on a local block (axis indices offset by ``off``
     for leading batch dims).  Owns the K-chunked overlap and the silent
-    fallback to one chunk when ``chunk_axis`` is not divisible by K."""
+    fallback to one chunk when ``chunk_axis`` is not divisible by K.
+
+    With K >= 2 chunks the stage runs as a depth-1 *software pipeline*
+    (``opts.stage_overlap``: "pipelined", the default): chunk i+1's
+    prologue/FFT is emitted *before* chunk i's collective, so the
+    overlap is a structural property of the program order — chunk i's
+    transpose has no consumer between it and chunk i+1's FFT — rather
+    than a scheduling accident.  ``"unrolled"`` keeps the legacy
+    chunk-after-chunk emission (chunk i's collective precedes chunk
+    i+1's FFT only in the dependence graph, relying on XLA's async
+    collective scheduler to interleave them).  Both modes run the same
+    ops on the same chunks, so their outputs are bitwise identical.
+    """
     ctx = ctx or {}
 
-    def one(c):
+    def pre(c):
         for op in st.prologue:
             c = op.apply(c, opts, ctx, off)
         if st.fft_axis is not None:
             c = _fft_along(c, st.fft_axis + off, sign, opts, st.impl_stage)
         for op in st.epilogue:
             c = op.apply(c, opts, ctx, off)
-        if st.comm_axis is not None:
-            c = _all_to_all(c, st.comm_axis, st.split_axis + off,
-                            st.concat_axis + off, opts.transpose_impl)
         return c
 
+    def comm(c):
+        return _all_to_all(c, st.comm_axis, st.split_axis + off,
+                           st.concat_axis + off, opts.transpose_impl)
+
     if st.comm_axis is None:
-        return one(blk)  # nothing to overlap with: never chunked
+        return pre(blk)  # nothing to overlap with: never chunked
     k = opts.overlap_k
     if k <= 1 or blk.shape[st.chunk_axis + off] % k:
-        return one(blk)
-    chunks = jnp.split(blk, k, axis=st.chunk_axis + off)
-    return jnp.concatenate([one(c) for c in chunks],
-                           axis=st.chunk_axis + off)
+        return comm(pre(blk))
+    ax = st.chunk_axis + off
+    chunks = jnp.split(blk, k, axis=ax)
+    if opts.stage_overlap(st.impl_stage) == "unrolled":
+        return jnp.concatenate([comm(pre(c)) for c in chunks], axis=ax)
+    # pipelined: double-buffered staged unroll — while chunk i is on the
+    # wire, chunk i+1 is in the FFT (the paper's second OpenMP thread)
+    outs = []
+    inflight = pre(chunks[0])
+    for i in range(k):
+        nxt = pre(chunks[i + 1]) if i + 1 < k else None
+        outs.append(comm(inflight))
+        inflight = nxt
+    return jnp.concatenate(outs, axis=ax)
 
 
 def run_schedule(blk: jax.Array, sched: Schedule, opts,

@@ -1,0 +1,207 @@
+"""Pallas pack/unpack kernels for the ring/pairwise global transposes.
+
+A P-rank ring (or pairwise) transpose moves P contiguous blocks of the
+split axis to P peers and reassembles P received blocks along the concat
+axis.  Rank r's send block for round s is the slice at ``(r + s) % P``
+— a *rotated* block gather — and the received pieces land rotated by
+``r`` the other way.  The executor used to express both sides as a
+``dynamic_slice`` plus a full-size ``dynamic_update_slice`` per round:
+P-1 full passes over the block just to shuffle it.
+
+Both sides are really one data movement each: a cyclic rotation of the
+P row-blocks by a rank-dependent shift.  :func:`rotate_blocks` does that
+rotation in a single tiled pass — the Pallas kernel reads row-block
+``(i + shift) % P`` and writes row-block ``i``, with the traced shift
+(``jax.lax.axis_index``) carried as a scalar operand, so pack and unpack
+each cost exactly one read + one write of the block:
+
+  pack    rotate_blocks(x, split_axis, shift=idx)    then P static slices
+  unpack  concatenate received pieces (static order), then
+          rotate_blocks(y, concat_axis, shift=-idx)
+
+Kernels follow the repo convention (``kernels/hermitian.py``): f32 plane
+kernels, row-blocked grid, compiled on TPU and interpret mode elsewhere;
+complex64 rides as separate real/imag planes.  Off-TPU the same data
+movements lower to the forms XLA CPU/GPU copy fastest (raced
+head-to-head on the CI host): a static-slice ``lax.switch`` pack, an
+in-place ``dynamic_update_slice`` unpack, and a doubled-buffer dynamic
+slice for :func:`rotate_blocks` itself — never ``jnp.roll``, whose
+traced-shift form lowers to a gather.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    from repro.kernels.ops import _on_tpu
+    return not _on_tpu()
+
+
+def _rotate_kernel(shift_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    """Pure block copy: the rotation lives entirely in the index maps."""
+    del shift_ref
+    or_ref[...] = xr_ref[...]
+    oi_ref[...] = xi_ref[...]
+
+
+def rotate_block_rows_planes(xr: jax.Array, xi: jax.Array, shift: jax.Array,
+                             n_blocks: int, *,
+                             interpret: Optional[bool] = None):
+    """(R, M) f32 planes -> planes with the ``n_blocks`` row-blocks
+    cyclically rotated by ``shift`` blocks (out block i = in block
+    (i + shift) % n_blocks).  ``shift`` is a shape-(1,) int32 array and
+    may be traced (the rank index inside ``shard_map``).
+
+    The shift rides as a *scalar-prefetch* operand consumed by the input
+    index map — grid step i simply fetches block ``(i + shift) %
+    n_blocks`` — so the kernel body is a pure tiled copy with no
+    data-dependent indexing (the Mosaic-friendly form: the scalar lands
+    in SMEM and only block scheduling depends on it)."""
+    interpret = _resolve_interpret(interpret)
+    r, m = xr.shape
+    if r % n_blocks:
+        raise ValueError(f"{r} rows not divisible into {n_blocks} blocks")
+    block_rows = r // n_blocks
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(
+            (block_rows, m),
+            lambda i, s_ref: ((i + s_ref[0]) % n_blocks, 0))] * 2,
+        out_specs=[pl.BlockSpec((block_rows, m),
+                                lambda i, s_ref: (i, 0))] * 2,
+    )
+    return pl.pallas_call(
+        _rotate_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, m), jnp.float32)] * 2,
+        interpret=interpret,
+    )(shift, xr, xi)
+
+
+def rotate_blocks(x: jax.Array, axis: int, shift, n_blocks: int, *,
+                  use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Cyclically rotate the ``n_blocks`` equal blocks of ``x`` along
+    ``axis`` by ``shift`` blocks (block i of the result is block
+    (i + shift) % n_blocks of the input).  ``shift`` may be traced.
+
+    This is the fused pack/unpack primitive of the ring and pairwise
+    transposes; ``use_pallas=None`` follows the repo convention (Pallas
+    on TPU, plain jnp elsewhere — the fallback is a doubled-buffer
+    dynamic slice, all contiguous copies).
+    """
+    if n_blocks == 1:
+        return x
+    extent = x.shape[axis]
+    if extent % n_blocks:
+        raise ValueError(
+            f"axis {axis} extent {extent} not divisible by {n_blocks}")
+    block = extent // n_blocks
+    if use_pallas is None:
+        from repro.kernels.ops import _on_tpu
+        use_pallas = _on_tpu()
+    if not use_pallas or x.dtype != jnp.complex64:
+        # NOT jnp.roll: a *traced* shift makes roll lower to a gather
+        # over the axis (index arithmetic per element).  Doubling the
+        # array and taking one dynamic slice keeps every byte moved by
+        # contiguous memcpy — 3 passes of plain copies beat 1 gather
+        # pass by a wide margin on every backend.
+        start = jnp.mod(jnp.asarray(shift, jnp.int32), n_blocks) * block
+        doubled = jnp.concatenate([x, x], axis=axis)
+        return jax.lax.dynamic_slice_in_dim(doubled, start, extent, axis)
+    moved = jnp.moveaxis(x, axis, 0)
+    rows = moved.shape[0]
+    cols = math.prod(moved.shape[1:])
+    xr = jnp.real(moved).reshape(rows, cols)
+    xi = jnp.imag(moved).reshape(rows, cols)
+    s = jnp.mod(jnp.asarray(shift, jnp.int32), n_blocks).reshape(1)
+    yr, yi = rotate_block_rows_planes(xr, xi, s, n_blocks,
+                                      interpret=interpret)
+    y = jax.lax.complex(yr, yi).reshape(moved.shape)
+    return jnp.moveaxis(y, 0, axis)
+
+
+def unpack_pieces(pieces: list, axis: int, shift, *,
+                  use_pallas: Optional[bool] = None) -> jax.Array:
+    """The ring unpack: reassemble received pieces with block i of the
+    result = ``pieces[(i + shift) % p]`` (``shift`` may be traced).
+
+    On TPU: one concatenate + the fused :func:`rotate_blocks` pass.
+    Elsewhere each piece lands with one ``dynamic_update_slice`` —
+    placements the compiler performs in place (one total pass over the
+    output), and unlike the pairwise emulation's chain the *ppermutes
+    feeding them* stay mutually independent, so placement order never
+    serializes the communication rounds.  (A p-way static-concat
+    ``lax.switch`` and a doubled-buffer dynamic slice were raced
+    head-to-head against this form on the CI host class; the in-place
+    placement wins.)
+    """
+    p = len(pieces)
+    if p == 1:
+        return pieces[0]
+    if use_pallas is None:
+        from repro.kernels.ops import _on_tpu
+        use_pallas = _on_tpu()
+    if use_pallas and pieces[0].dtype == jnp.complex64:
+        return rotate_blocks(jnp.concatenate(pieces, axis=axis), axis,
+                             shift, p, use_pallas=use_pallas)
+    block = pieces[0].shape[axis]
+    out_shape = list(pieces[0].shape)
+    out_shape[axis] = p * block
+    out = jnp.zeros(out_shape, pieces[0].dtype)
+    # pieces[m] is block (m - shift) % p of the result
+    starts = jnp.mod(jnp.arange(p, dtype=jnp.int32)
+                     - jnp.asarray(shift, jnp.int32), p) * block
+    for m, piece in enumerate(pieces):
+        out = jax.lax.dynamic_update_slice_in_dim(out, piece, starts[m], axis)
+    return out
+
+
+def pack_pieces(blk: jax.Array, axis: int, idx, n_blocks: int, *,
+                use_pallas: Optional[bool] = None) -> list:
+    """The ring/pairwise send pack: the ``n_blocks`` blocks of ``axis``
+    as a list ordered by round (piece s is the block bound for rank
+    ``(idx + s) % n_blocks``).
+
+    On TPU this is the fused :func:`rotate_blocks` pass followed by free
+    static slices; elsewhere a p-way ``lax.switch`` over static slice
+    sets — the rank index takes only p values, so the compiler sees
+    plain strided views (exactly one total pass over the block, no
+    full-size intermediate, no dynamic indexing).
+    """
+    extent = blk.shape[axis]
+    if extent % n_blocks:
+        raise ValueError(
+            f"axis {axis} extent {extent} not divisible by {n_blocks}")
+    block = extent // n_blocks
+    if use_pallas is None:
+        from repro.kernels.ops import _on_tpu
+        use_pallas = _on_tpu()
+    if use_pallas and blk.dtype == jnp.complex64:
+        packed = rotate_blocks(blk, axis, idx, n_blocks,
+                               use_pallas=use_pallas)
+        return jnp.split(packed, n_blocks, axis=axis)
+    # p-way branch over static slice sets (see unpack_pieces): the
+    # compiler sees plain strided views, not p dynamic slices
+    p = n_blocks
+
+    def cut(b, r):
+        return tuple(
+            jax.lax.slice_in_dim(b, ((r + s) % p) * block,
+                                 ((r + s) % p + 1) * block, axis=axis)
+            for s in range(p))
+
+    branches = [(lambda b, r=r: cut(b, r)) for r in range(p)]
+    return list(jax.lax.switch(jnp.mod(jnp.asarray(idx, jnp.int32), p),
+                               branches, blk))

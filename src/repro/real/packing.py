@@ -27,6 +27,14 @@ under the later y/x FFTs and is unfolded once, at the end, by a single
 All functions are pure jnp (they trace inside ``shard_map`` bodies);
 ``use_pallas=True`` routes the hot unpack / Hermitian-extend steps
 through the fused Pallas kernels in ``repro.kernels.hermitian``.
+
+Everything here is batch-transparent: the spectrum axis is always the
+*last* axis and the pair axis an explicit (batch-offset) index, so
+leading batch axes — vmapped velocity components, stacked fields —
+vectorize through pack/unpack/repack in one pass (the Pallas paths
+flatten every leading axis into kernel rows), and the distributed
+pipeline's DC/Nyquist unfold amortizes across the whole batch instead
+of falling back per-field.
 """
 
 from __future__ import annotations

@@ -88,9 +88,9 @@ def packed_unsupported_reason(shape: Sequence[int], decomp: Decomposition,
         axis_sizes = decomp.axis_sizes(sizes)
     except (KeyError, TypeError) as e:
         return f"decomposition axes unresolvable on this mesh: {e}"
-    if opts is not None and opts.transpose_impl == "pairwise" and any(
+    if opts is not None and opts.transpose_impl in ("pairwise", "ring") and any(
             isinstance(a, tuple) for a in decomp.axes):
-        return "pairwise transpose supports single mesh axes only"
+        return f"{opts.transpose_impl} transpose supports single mesh axes only"
     if decomp.kind == "slab":
         (p,) = axis_sizes
         if nx % p:
@@ -191,11 +191,15 @@ def build_packed_inverse(decomp: Decomposition, nz: int) -> Schedule:
 # ---------------------------------------------------------------------------
 
 def unfold_dc_plane(packed: jax.Array) -> jax.Array:
-    """Packed (Nx, Ny, Nz2) spectrum -> rfftn-style (Nx, Ny, Nz2 + 1).
+    """Packed (..., Nx, Ny, Nz2) spectrum -> rfftn-style (..., Nx, Ny,
+    Nz2 + 1).
 
     Bin 0 holds G = F2(DC_z) + i*F2(Nyq_z) with DC_z/Nyq_z real planes;
     the 2-D Hermitian split recovers both.  Runs at the global (traced)
-    level so XLA shuffles only this one plane across shards.
+    level so XLA shuffles only this one plane across shards.  The
+    reconstruction is expressed over the trailing axes only, so a
+    batched spectrum unfolds all its (Nx, Ny) planes in one vectorized
+    pass — batched r2c never falls back to per-field dispatch.
     """
     g = packed[..., 0]
     rev = jnp.conj(packing.negate_freq(packing.negate_freq(g, -1), -2))
@@ -243,6 +247,15 @@ def real_input_spec(decomp: Decomposition):
     return decomp.spectral_spec()
 
 
+def _with_batch_dims(spec, n: int):
+    """A rank-3 PartitionSpec widened with ``n`` leading unsharded batch
+    axes (velocity-component stacks and other vmapped field batches)."""
+    from jax.sharding import PartitionSpec as P
+    if n == 0:
+        return spec
+    return P(*((None,) * n), *spec)
+
+
 def constrain_sharding(y: jax.Array, sharding: NamedSharding) -> jax.Array:
     """Reshard ``y``: a sharding constraint under tracing, a device_put
     on concrete arrays (shared by the packed pipeline and core.rfft)."""
@@ -262,20 +275,30 @@ def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
     k-space multiply into the same jit, right after the plane unfold —
     the "unfolded epilogue" variant that works for any filter, including
     those with h(kz=0) != h(kz=Nyquist).
+
+    Leading batch axes (velocity-component triples and the like) ride
+    natively: a (B, Nx, Ny, Nz) input runs ONE schedule whose
+    collectives move all B fields per launch and whose DC/Nyquist plane
+    unfold reconstructs all B planes in a single pass — no per-field
+    vmap dispatch (the executor offsets every axis index by the batch
+    rank, ``run_schedule``'s ``off``).
     """
     if opts is None:
         opts = FFTOptions()
-    if x.ndim != 3:
-        raise ValueError("packed_rfft3d expects a rank-3 (Nx,Ny,Nz) array")
+    if x.ndim < 3:
+        raise ValueError("packed_rfft3d expects a (..., Nx, Ny, Nz) array")
+    nbatch = x.ndim - 3
     reason = packed_unsupported_reason(x.shape, decomp, mesh, opts)
     if reason is not None:
         raise ValueError(f"packed r2c unsupported here: {reason}")
     sched = build_packed_forward(decomp)
     fn = shard_map(
         functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
-        mesh=mesh, in_specs=sched.layout_in.partition_spec(),
-        out_specs=sched.layout_out.partition_spec())
-    out_sharding = NamedSharding(mesh, decomp.spectral_spec())
+        mesh=mesh,
+        in_specs=_with_batch_dims(sched.layout_in.partition_spec(), nbatch),
+        out_specs=_with_batch_dims(sched.layout_out.partition_spec(), nbatch))
+    out_sharding = NamedSharding(
+        mesh, _with_batch_dims(decomp.spectral_spec(), nbatch))
     # one half-volume all-to-all brings z local (the schedule's recorded
     # ExtraComm), so the odd-sized Nh axis stays unsharded and the plane
     # unfold needs no cross-z traffic
@@ -294,11 +317,14 @@ def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
 def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
                    opts: Optional[FFTOptions] = None,
                    norm: Optional[str] = None) -> jax.Array:
-    """Distributed packed c2r: (Nx, Ny, Nz//2 + 1) -> real (Nx, Ny, Nz)."""
+    """Distributed packed c2r: (..., Nx, Ny, Nz//2 + 1) -> real
+    (..., Nx, Ny, Nz); leading batch axes ride natively (see
+    :func:`packed_rfft3d`)."""
     if opts is None:
         opts = FFTOptions()
-    if y.ndim != 3:
-        raise ValueError("packed_irfft3d expects a rank-3 spectrum")
+    if y.ndim < 3:
+        raise ValueError("packed_irfft3d expects a (..., Nx, Ny, Nh) spectrum")
+    nbatch = y.ndim - 3
     nx, ny = y.shape[-3], y.shape[-2]
     reason = packed_unsupported_reason((nx, ny, nz), decomp, mesh, opts)
     if reason is not None:
@@ -306,12 +332,14 @@ def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
     # fold in the z-local layout (mirror of the forward's epilogue); the
     # shard_map in_specs below reshard the packed body back to the
     # natural layout (the schedule's recorded ExtraComm)
-    y = constrain_sharding(y, NamedSharding(mesh, decomp.spectral_spec()))
+    y = constrain_sharding(y, NamedSharding(
+        mesh, _with_batch_dims(decomp.spectral_spec(), nbatch)))
     packed = fold_dc_plane(y, nz)
     sched = build_packed_inverse(decomp, nz)
     fn = shard_map(
         functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
-        mesh=mesh, in_specs=sched.layout_in.partition_spec(),
-        out_specs=sched.layout_out.partition_spec())
+        mesh=mesh,
+        in_specs=_with_batch_dims(sched.layout_in.partition_spec(), nbatch),
+        out_specs=_with_batch_dims(sched.layout_out.partition_spec(), nbatch))
     x = fn(packed)
     return x * jnp.asarray(_norm_scale((nx, ny, nz), +1, norm), x.dtype)

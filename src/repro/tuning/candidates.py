@@ -152,16 +152,25 @@ def enumerate_candidates(
                         continue  # cell pipeline restores natural layout
                     variants = [dict(transpose_impl="alltoall",
                                      plan_cache=True)]
+                    # ring / pairwise ppermute over ONE mesh axis: folded
+                    # axes and the cell regroup (which runs the pencil
+                    # pipeline over a folded (y, x) communicator) are
+                    # rejected by Decomposition.validate — never emit
+                    # candidates that cannot trace
+                    single_axes = (dec.kind != "cell" and all(
+                        not isinstance(a, tuple) for a in dec.axes))
+                    if single_axes:
+                        # the ring pipeline is a real contender (it
+                        # overlaps even when no chunk axis divides), so
+                        # it is part of the production search space —
+                        # the cost model's latency/bandwidth split ranks
+                        # it, not a hardcoded preference
+                        variants.append(dict(transpose_impl="ring",
+                                             plan_cache=True))
                     if include_baselines:
                         variants.append(dict(transpose_impl="alltoall",
                                              plan_cache=False))
-                        # pairwise ppermutes over ONE mesh axis: folded
-                        # axes and the cell regroup (which runs the pencil
-                        # pipeline over a folded (y, x) communicator) are
-                        # rejected by Decomposition.validate — never emit
-                        # candidates that cannot trace
-                        if dec.kind != "cell" and all(
-                                not isinstance(a, tuple) for a in dec.axes):
+                        if single_axes:
                             variants.append(dict(transpose_impl="pairwise",
                                                  plan_cache=True))
                     for var in variants:

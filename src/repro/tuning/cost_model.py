@@ -18,8 +18,16 @@ object the executor runs) and walks it —
   latency     a per-collective launch cost using each stage's *effective*
               K (the executor's chunk-indivisible fallback is modeled,
               and out-of-body reshards count as one fused all-to-all);
-              this is what separates one fused all_to_all from the P-1
-              pairwise exchanges of the FFTW3-style transpose (figs 12-15)
+              the alpha/beta split per transpose impl: "alltoall" pays
+              one alpha per (chunk, stage) and its beta overlaps only
+              when K >= 2 chunks exist to pipeline; "ring" pays P-1
+              alphas per chunk plus one fused pack/unpack HBM pass each
+              side, but its beta is overlapped with FFT compute even at
+              K=1 (the rounds are independent of each other and of the
+              neighbouring chunks' FFTs — the executor's explicit
+              pipeline); "pairwise" pays P-1 alphas AND a serial
+              placement chain (P-1 full-size output rewrites, never
+              overlapped) — the FFTW3 baseline of figs 12-15
 
 K-chunked overlap (the paper's core mechanism) combines compute and
 collective with ``max(...)`` instead of ``+`` (§5.1 options 3/4), and
@@ -81,6 +89,8 @@ class CostBreakdown:
     collective_bytes: float
     n_collectives: int
     n_procs: int
+    #: ring pack/unpack passes or the pairwise serial placement chain
+    transpose_overhead_s: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -146,19 +156,32 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
 
     # collective-op count: effective K chunks per in-body transpose (the
     # executor's chunk-indivisible fallback, read from the schedule); the
-    # pairwise transpose issues (P_axis - 1) ppermutes where the fused
-    # path issues one a2a; out-of-body reshards are one fused a2a each
+    # ppermute-based transposes (ring, pairwise) issue (P_axis - 1)
+    # rounds where the fused path issues one a2a; out-of-body reshards
+    # are one fused a2a each.  Alongside the alpha count, each impl's
+    # structural overhead: the ring pays one fused pack + one fused
+    # unpack pass over the moved bytes, the pairwise emulation pays a
+    # *serial* placement chain of P-1 full-size output rewrites.
+    impl = opts.transpose_impl
     eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
     n_coll = 0
     k_eff_max = 1
+    any_chunkable = False
+    transpose_overhead_s = 0.0
     for ev in events:
         if not ev["chunkable"]:
             n_coll += 1
             continue
+        any_chunkable = True
         k_eff = next(eff_ks)
         k_eff_max = max(k_eff_max, k_eff)
-        ops = (ev["comm_size"] - 1) if opts.transpose_impl == "pairwise" else 1
+        ops = (ev["comm_size"] - 1) if impl in ("ring", "pairwise") else 1
         n_coll += k_eff * ops
+        ev_bytes = ev["bytes"] * batch
+        if impl == "ring":
+            transpose_overhead_s += 2 * ev_bytes / HBM_BW
+        elif impl == "pairwise":
+            transpose_overhead_s += (ev["comm_size"] - 1) * ev_bytes / HBM_BW
     latency_s = n_coll * COLLECTIVE_LATENCY_S
 
     replan_s = 0.0
@@ -166,18 +189,29 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
         replan_s = REPLAN_PASSES * local_bytes / HBM_BW
 
     busy = compute_s + memory_s
-    if k_eff_max >= 2:
+    if impl == "ring":
+        busy += transpose_overhead_s  # pack/unpack pipeline with the rounds
+    # beta overlap: K >= 2 chunks pipeline any impl's collective against
+    # the neighbouring chunks' FFTs; the ring's independent rounds
+    # additionally overlap at K=1.  The pairwise serial chain never
+    # overlaps — each round's placement depends on the previous one.
+    overlaps = (any_chunkable and impl != "pairwise"
+                and (k_eff_max >= 2 or impl == "ring"))
+    if overlaps:
         # paper §5.1: chunked pipeline hides the smaller of the two legs
         overlapped = max(busy, collective_s) + 0.1 * min(busy, collective_s)
     else:
         overlapped = busy + collective_s
+        if impl == "pairwise":
+            overlapped += transpose_overhead_s
     total = overlapped + latency_s + replan_s
 
     return CostBreakdown(
         compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
         latency_s=latency_s, replan_s=replan_s, total_s=total, flops=flops,
         local_bytes=float(local_bytes), collective_bytes=float(coll_bytes),
-        n_collectives=n_coll, n_procs=p)
+        n_collectives=n_coll, n_procs=p,
+        transpose_overhead_s=transpose_overhead_s)
 
 
 def rank_candidates(shape: Sequence[int], cands: Sequence[Candidate],

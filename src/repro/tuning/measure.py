@@ -31,16 +31,38 @@ def _random_input(shape, dtype, sharding):
     return x
 
 
-def time_forward(plan, *, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall seconds per forward transform of a built plan."""
+def _batched_sharding(sharding, batch: int):
+    """The plan's per-field sharding with a leading replicated batch axis."""
+    if sharding is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(sharding.mesh, P(None, *sharding.spec))
+
+
+def time_forward(plan, *, warmup: int = 2, iters: int = 5,
+                 batch: int = 1) -> float:
+    """Median wall seconds per forward transform of a built plan.
+
+    ``batch > 1`` times the *vmapped* transform over B stacked fields —
+    what a ``tune(batch=B)`` caller will actually run — instead of the
+    B=1 proxy (under vmap the per-stage all_to_alls batch into single
+    collectives, so deeper plans amortize their launches and the B=1
+    timing would mis-rank them).
+    """
     in_dtype = getattr(plan, "input_dtype", plan.dtype)  # real for r2c plans
-    x = _random_input(plan.shape, in_dtype, plan.input_sharding)
+    if batch > 1:
+        x = _random_input((batch,) + tuple(plan.shape), in_dtype,
+                          _batched_sharding(plan.input_sharding, batch))
+        fwd = jax.jit(jax.vmap(plan.forward))
+    else:
+        x = _random_input(plan.shape, in_dtype, plan.input_sharding)
+        fwd = plan.forward
     for _ in range(warmup):
-        jax.block_until_ready(plan.forward(x))
+        jax.block_until_ready(fwd(x))
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(plan.forward(x))
+        jax.block_until_ready(fwd(x))
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
@@ -48,15 +70,16 @@ def time_forward(plan, *, warmup: int = 2, iters: int = 5) -> float:
 
 def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
                       dtype=jnp.complex64, *, warmup: int = 2,
-                      iters: int = 5) -> Optional[float]:
-    """Median forward seconds for one candidate on the live mesh; None if
-    the candidate fails to build/compile (it is then dropped from the
-    race rather than failing the whole tune)."""
+                      iters: int = 5, batch: int = 1) -> Optional[float]:
+    """Median forward seconds for one candidate on the live mesh (vmapped
+    over ``batch`` stacked fields when batch > 1); None if the candidate
+    fails to build/compile (it is then dropped from the race rather than
+    failing the whole tune)."""
     from repro.core.api import Croft3D
     try:
         plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
                        dtype=jnp.dtype(dtype), problem=cand.problem,
                        strategy=cand.strategy)
-        return time_forward(plan, warmup=warmup, iters=iters)
+        return time_forward(plan, warmup=warmup, iters=iters, batch=batch)
     except Exception:
         return None

@@ -87,10 +87,10 @@ def tune(shape: Sequence[int], mesh=None, *,
     ``local_impl`` 3-tuples.
 
     ``batch`` plans for B vmapped fields: the cost model scales volume
-    terms (not collective launch counts) by B and the wisdom key gains a
+    terms (not collective launch counts) by B, the wisdom key gains a
     ``|b{B}`` dimension (``batch=1`` keeps the legacy key format, so old
-    wisdom files still hit).  Measurement times the B=1 transform — the
-    model ranking is what shifts with batch.
+    wisdom files still hit), and ``mode="measure"`` times the *vmapped*
+    transform over B stacked fields — the same thing the caller will run.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -152,7 +152,7 @@ def tune(shape: Sequence[int], mesh=None, *,
         for c in pool:
             t = measure.measure_candidate(
                 shape, mesh, c, dtype, warmup=measure_warmup,
-                iters=measure_iters)
+                iters=measure_iters, batch=batch)
             if t is not None:
                 raced.append((c, t))
         if not raced:

@@ -475,3 +475,62 @@ err2 = float(jnp.max(jnp.abs(y2 - ref))) / np.abs(ref).max()
 assert err2 < 1e-5, err2
 print("OK tuned r2c", err2)
 """, timeout=900)
+
+
+def test_batched_packed_r2c_native_and_vmapped_measure():
+    """Leading batch axes ride the packed pipeline natively (one schedule,
+    batched collectives, one amortized DC/Nyquist unfold — no per-field
+    vmap dispatch), vmap still works on top, and mode="measure" with
+    batch=B times the vmapped transform (the ROADMAP follow-on)."""
+    run_multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import Croft3D, Decomposition, FFTOptions
+from repro import tuning
+mesh = jax.make_mesh((2,4), ("y","z"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+dec = Decomposition("pencil", ("y","z"))
+N, B = 32, 3
+rng = np.random.RandomState(11)
+xb = rng.randn(B, N, N, N).astype(np.float32)
+ref = np.stack([np.fft.rfftn(xb[i]) for i in range(B)])
+plan = Croft3D((N,N,N), mesh, dec, FFTOptions(), problem="r2c",
+               strategy="packed")
+sh = NamedSharding(mesh, P(None, *plan.input_sharding.spec))
+xd = jax.device_put(jnp.asarray(xb), sh)
+
+# native leading batch axis: one transform call over (B, Nx, Ny, Nz)
+y = plan.forward(xd)
+assert y.shape == (B, N, N, N//2 + 1), y.shape
+err = float(jnp.max(jnp.abs(y - ref))) / np.abs(ref).max()
+assert err < 1e-5, err
+xb_back = plan.inverse(y)
+rerr = float(jnp.max(jnp.abs(xb_back - xb)))
+assert rerr < 1e-4, rerr
+
+# the batched call compiles to the same collective COUNT as one field:
+# the batch rides inside each launch instead of multiplying launches
+from repro.launch import hlo_cost
+def coll_count(fn, spec):
+    c = jax.jit(fn).lower(spec).compile()
+    a = hlo_cost.analyze(c.as_text())
+    return sum(v["count"] for v in a.collectives.values())
+s1 = jax.ShapeDtypeStruct((N,N,N), jnp.float32,
+                          sharding=plan.input_sharding)
+sB = jax.ShapeDtypeStruct((B,N,N,N), jnp.float32, sharding=sh)
+n1, nB = coll_count(plan.forward, s1), coll_count(plan.forward, sB)
+assert n1 == nB, (n1, nB)
+
+# vmap on top of the native path still matches
+yv = jax.jit(jax.vmap(plan.forward))(xd)
+assert float(jnp.max(jnp.abs(yv - ref))) / np.abs(ref).max() < 1e-5
+
+# mode="measure" with batch=B builds and times vmapped candidates
+res = tuning.tune((N,N,N), mesh, mode="measure", problem="r2c",
+                  batch=B, top_k=1, measure_iters=2, measure_warmup=1)
+assert res.measured_s is not None and res.measured_s > 0
+assert res.key.endswith("|b%d" % B), res.key
+t = tuning.time_forward(plan, warmup=1, iters=2, batch=B)
+assert t > 0
+print("OK batched packed r2c", err, "colls", n1, "measured", res.measured_s)
+""", timeout=900)

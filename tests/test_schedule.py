@@ -344,6 +344,181 @@ def test_pairwise_rejected_for_folded_and_cell():
             assert all(not isinstance(a, tuple) for a in c.decomp.axes)
 
 
+# --- transpose impls: alltoall / ring / pairwise -----------------------------
+
+def test_transpose_impls_bitwise_identical():
+    """The three global-transpose impls (and both chunk emission modes)
+    are pure data-movement variants: every (impl, K, mode) point must
+    produce the *bitwise identical* transform — across pencil, slab and
+    cell, c2c and packed r2c, including the K-chunked pipelined path
+    (K=3's chunk-indivisible fallback is covered by
+    ``test_chunk_fallback_matches_k1_numerics`` — pencil/slab validation
+    rejects indivisible K at plan build)."""
+    run_multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import Croft3D, Decomposition, FFTOptions
+N = 16
+rng = np.random.RandomState(0)
+xc = (rng.randn(N,N,N) + 1j*rng.randn(N,N,N)).astype(np.complex64)
+xr = rng.randn(N,N,N).astype(np.float32)
+
+def sweep(mesh, dec, impls, problem, xin, ref):
+    outs = {}
+    kw = dict(problem="r2c", strategy="packed") if problem == "r2c" else {}
+    for impl in impls:
+        for k in (1, 2, 4):
+            for mode in ("pipelined", "unrolled"):
+                plan = Croft3D((N,N,N), mesh, dec,
+                               FFTOptions(overlap_k=k, transpose_impl=impl,
+                                          overlap_mode=mode), **kw)
+                xd = jax.device_put(jnp.asarray(xin), plan.input_sharding)
+                outs[(impl, k, mode)] = np.asarray(plan.forward(xd))
+    base = outs[(impls[0], 1, "pipelined")]
+    err = np.max(np.abs(base - ref)) / np.abs(ref).max()
+    assert err < 1e-5, err
+    for key, v in outs.items():
+        assert np.array_equal(v, base), f"transform differs at {key}"
+
+ALL = ("alltoall", "ring", "pairwise")
+mesh2 = jax.make_mesh((2,4), ("y","z"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+pencil = Decomposition("pencil", ("y","z"))
+sweep(mesh2, pencil, ALL, "c2c", xc, np.fft.fftn(xc))
+sweep(mesh2, pencil, ALL, "r2c", xr, np.fft.rfftn(xr))
+mesh1 = jax.make_mesh((8,), ("p",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+slab = Decomposition("slab", ("p",))
+sweep(mesh1, slab, ALL, "c2c", xc, np.fft.fftn(xc))
+sweep(mesh1, slab, ALL, "r2c", xr, np.fft.rfftn(xr))
+mesh3 = jax.make_mesh((2,2,2), ("a","b","c"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+cell = Decomposition("cell", ("a","b","c"))
+sweep(mesh3, cell, ("alltoall",), "c2c", xc, np.fft.fftn(xc))
+# ring/pairwise over the cell's folded regroup communicator must be
+# rejected at plan-build time, not fail inside shard_map
+for impl in ("ring", "pairwise"):
+    try:
+        Croft3D((N,N,N), mesh3, cell, FFTOptions(transpose_impl=impl))
+        raise AssertionError(f"cell + {impl} was not rejected")
+    except ValueError:
+        pass
+print("OK transpose impls bitwise identical")
+""", timeout=900)
+
+
+def test_transpose_pack_kernels(rng):
+    """rotate_blocks / pack_pieces / unpack_pieces: jnp fallback and the
+    Pallas plane kernel agree with the roll reference, traced and
+    concrete, and pack -> unpack round-trips the ring's permutation."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import transpose_pack as tp
+
+    x = (rng.randn(4, 24, 5) + 1j * rng.randn(4, 24, 5)).astype(np.complex64)
+    p = 8
+    for shift in (0, 1, 3, -2, 11):
+        ref = np.roll(x, -(shift % p) * 3, axis=1)
+        got = np.asarray(tp.rotate_blocks(jnp.asarray(x), 1, shift, p,
+                                          use_pallas=False))
+        np.testing.assert_array_equal(got, ref)
+        ker = np.asarray(tp.rotate_blocks(jnp.asarray(x), 1, shift, p,
+                                          use_pallas=True, interpret=True))
+        np.testing.assert_array_equal(ker, ref)
+    # traced shift (what shard_map's axis_index produces)
+    f = jax.jit(lambda a, s: tp.rotate_blocks(a, 1, s, p, use_pallas=False))
+    got = np.asarray(f(jnp.asarray(x), jnp.asarray(2)))
+    np.testing.assert_array_equal(got, np.roll(x, -6, axis=1))
+
+    # pack: piece s is the block bound for rank (idx + s) % p
+    for idx in (0, 2, 7):
+        pieces = tp.pack_pieces(jnp.asarray(x), 1, idx, p)
+        assert len(pieces) == p
+        for s, piece in enumerate(pieces):
+            d = (idx + s) % p
+            np.testing.assert_array_equal(np.asarray(piece),
+                                          x[:, d * 3:(d + 1) * 3])
+        # unpack: result block i = pieces[(i + shift) % p]
+        out = np.asarray(tp.unpack_pieces(pieces, 1, -idx))
+        rot = np.asarray(tp.rotate_blocks(jnp.concatenate(pieces, 1), 1,
+                                          -idx, p, use_pallas=False))
+        np.testing.assert_array_equal(out, rot)
+
+    with pytest.raises(ValueError):
+        tp.rotate_blocks(jnp.asarray(x), 1, 1, 7)  # 24 % 7 != 0
+
+
+def test_fftoptions_overlap_knobs():
+    o = FFTOptions(overlap_mode=("pipelined", "unrolled", "pipelined"),
+                   transpose_impl="ring")
+    assert o.stage_overlap(1) == "unrolled"
+    assert o.stage_overlap(2) == "pipelined"
+    # homogeneous tuples collapse (canonical wisdom-key form)
+    assert FFTOptions(overlap_mode=("unrolled",) * 3).overlap_mode == "unrolled"
+    with pytest.raises(ValueError, match="transpose_impl"):
+        FFTOptions(transpose_impl="bruck")
+    with pytest.raises(ValueError, match="overlap_mode"):
+        FFTOptions(overlap_mode="eager")
+    with pytest.raises(ValueError):
+        FFTOptions(overlap_mode=("pipelined", "unrolled"))  # needs 3
+
+
+def test_ring_rejected_for_folded_and_cell():
+    folded = Decomposition("pencil", (("a", "b"), "c"))
+    sizes = {"a": 2, "b": 2, "c": 2}
+    with pytest.raises(ValueError, match="ring"):
+        folded.validate((32,) * 3, sizes, 1, "ring")
+    with pytest.raises(ValueError, match="folded"):
+        CELL.validate((32,) * 3, sizes, 1, "ring")
+    SLAB.validate((32,) * 3, {"p": 8}, 1, "ring")  # single axis: fine
+    # the DEFAULT candidate space carries ring wherever it can trace —
+    # and only there (no folded axes, no cell; on this 2-axis mesh that
+    # is the single-axis pencil points)
+    cands = tuning.enumerate_candidates((32,) * 3, SIZES)
+    by_impl = {}
+    for c in cands:
+        by_impl.setdefault(c.opts.transpose_impl, []).append(c)
+    assert "ring" in by_impl and "pairwise" not in by_impl
+    for c in by_impl["ring"]:
+        assert c.decomp.kind != "cell"
+        assert all(not isinstance(a, tuple) for a in c.decomp.axes)
+
+
+def test_cost_model_transpose_impl_split():
+    """The alpha/beta split: ring pays K*(P-1) launches plus pack/unpack
+    passes but overlaps its bandwidth term even at K=1; pairwise pays
+    the same launches plus a serialized placement chain; alltoall keeps
+    the legacy behaviour (one alpha per chunk, overlap only at K>=2).
+    The ranking emerges from the terms — ring beats the unoverlapped
+    alltoall once bytes dominate, and pairwise never wins."""
+    sizes = SIZES
+    mk = lambda impl, k=1: tuning.Candidate(PENCIL, FFTOptions(
+        overlap_k=k, transpose_impl=impl, output_layout="spectral"))
+    a1 = tuning.analytic_cost((128,) * 3, mk("alltoall"), sizes)
+    r1 = tuning.analytic_cost((128,) * 3, mk("ring"), sizes)
+    p1 = tuning.analytic_cost((128,) * 3, mk("pairwise"), sizes)
+    # launch counts: 2 stages over (data=2, model=4) -> a2a 2, ring/pw
+    # (2-1) + (4-1) = 4 ppermute rounds
+    assert a1.n_collectives == 2
+    assert r1.n_collectives == 4 and p1.n_collectives == 4
+    assert r1.transpose_overhead_s > 0 and p1.transpose_overhead_s > 0
+    assert a1.transpose_overhead_s == 0
+    # at 128^3 the overlapped ring beats the unoverlapped alltoall and
+    # the serialized pairwise loses to both — no hardcoded preference,
+    # pure arithmetic (at 32^3 the alpha terms flip ring below alltoall)
+    assert r1.total_s < a1.total_s
+    assert p1.total_s > a1.total_s
+    small_r = tuning.analytic_cost((32,) * 3, mk("ring"), sizes)
+    small_a = tuning.analytic_cost((32,) * 3, mk("alltoall"), sizes)
+    assert small_r.total_s > small_a.total_s
+    # ring launches scale with K; model ranks via the same terms
+    r4 = tuning.analytic_cost((128,) * 3, mk("ring", 4), sizes)
+    assert r4.n_collectives == 4 * 4
+    # mode="model" ranks the ring candidates alongside everything else
+    res = tuning.tune((128,) * 3, axis_sizes=sizes, mode="model")
+    labels = [row["label"] for row in res.ranked]
+    assert any("/ring" in l for l in labels)
+
+
 # --- fused epilogue ----------------------------------------------------------
 
 def test_with_epilogue_structure():
