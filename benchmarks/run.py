@@ -6,9 +6,11 @@ artifacts / roofline constants — no TPU in this container).
 
 ``--smoke`` runs only the fast sweeps — the autotuner
 (``benchmarks.tuning_bench``), the real-transform packed-vs-embed
-comparison (``benchmarks.rfft_bench``), and the transpose overlap-engine
-sweep (``benchmarks.overlap_bench``) — the CI path exercising the
-planner, the r2c pipeline, and all three transpose impls end to end on
+comparison (``benchmarks.rfft_bench``), the transpose overlap-engine
+sweep (``benchmarks.overlap_bench``), and the transform-service load
+sweep (``benchmarks.serve_bench``) — the CI path exercising the planner,
+the r2c pipeline, all three transpose impls, and the serving layer
+(including its deterministic batched-collective gate) end to end on
 every push.
 """
 
@@ -19,7 +21,8 @@ import traceback
 FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.kernel_micro", "benchmarks.lm_roofline",
                 "benchmarks.train_bench", "benchmarks.tuning_bench",
-                "benchmarks.rfft_bench", "benchmarks.overlap_bench"]
+                "benchmarks.rfft_bench", "benchmarks.overlap_bench",
+                "benchmarks.serve_bench"]
 
 
 def main() -> None:
@@ -31,10 +34,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     if args.smoke:
-        from benchmarks import overlap_bench, rfft_bench, tuning_bench
+        from benchmarks import (overlap_bench, rfft_bench, serve_bench,
+                                tuning_bench)
         tuning_bench.run(smoke=True)
         rfft_bench.run(smoke=True)
         overlap_bench.run(smoke=True)
+        serve_bench.run(smoke=True)
         return
     for modname in FULL_MODULES:
         try:

@@ -154,6 +154,21 @@ class Croft3D:
 
     _fwd_filtered = None
 
+    def _filtered_fn(self):
+        """The jitted (x, h) -> filtered-spectrum callable (lazy; shared
+        by :meth:`forward_filtered` and the batched dispatch path)."""
+        if self._fwd_filtered is None:
+            if self.problem == "r2c":
+                from repro.core import rfft
+                strat = self.strategy
+                self._fwd_filtered = jax.jit(lambda v, hh: rfft.rfft3d(
+                    v, self.mesh, self.decomp, self.opts, strategy=strat,
+                    kspace_filter=hh))
+            else:
+                self._fwd_filtered = jax.jit(lambda v, hh: distributed.fft3d(
+                    v, self.mesh, self.decomp, self.opts, kspace_filter=hh))
+        return self._fwd_filtered
+
     def forward_filtered(self, x: jax.Array, h: jax.Array,
                          alpha: float = 1.0) -> jax.Array:
         """``forward`` with the k-space multiply ``alpha * h`` fused in.
@@ -165,18 +180,97 @@ class Croft3D:
         extra HBM round trip over the spectrum.  ``h`` must be shaped
         like ``spectrum_shape`` and placed with ``output_sharding``.
         """
-        if self._fwd_filtered is None:
-            if self.problem == "r2c":
+        hh = h if alpha == 1.0 else h * jnp.asarray(alpha, h.dtype)
+        return self._filtered_fn()(x, hh)
+
+    # -- batched dispatch (the serving path) ---------------------------------
+    #
+    # One executable per (plan, batch-size-bucket) moving B stacked fields
+    # through the SAME collective count as B=1: the packed r2c pipeline
+    # takes leading batch axes natively (its executor offsets every axis
+    # index by the batch rank), everything else vmaps — under vmap the
+    # per-stage all_to_alls batch into single collectives.  The c2c
+    # entries donate the stacked input buffer (complex in, complex out,
+    # same shape: XLA aliases it for the first stage's scratch).
+
+    _batched = None  # lazy {(kind): jitted fn}
+
+    def _batched_fn(self, kind: str):
+        if self._batched is None:
+            self._batched = {}
+        fn = self._batched.get(kind)
+        if fn is not None:
+            return fn
+        native_packed = self.problem == "r2c" and self.strategy == "packed"
+        if kind == "forward":
+            if native_packed:
                 from repro.core import rfft
                 strat = self.strategy
-                self._fwd_filtered = jax.jit(lambda v, hh: rfft.rfft3d(
-                    v, self.mesh, self.decomp, self.opts, strategy=strat,
-                    kspace_filter=hh))
+                fn = jax.jit(lambda v: rfft.rfft3d(
+                    v, self.mesh, self.decomp, self.opts, strategy=strat))
             else:
-                self._fwd_filtered = jax.jit(lambda v, hh: distributed.fft3d(
-                    v, self.mesh, self.decomp, self.opts, kspace_filter=hh))
-        hh = h if alpha == 1.0 else h * jnp.asarray(alpha, h.dtype)
-        return self._fwd_filtered(x, hh)
+                donate = (0,) if self.problem == "c2c" else ()
+                fn = jax.jit(jax.vmap(self._fwd), donate_argnums=donate)
+        elif kind == "inverse":
+            if native_packed:
+                from repro.core import rfft
+                strat, nz = self.strategy, self.shape[-1]
+                fn = jax.jit(lambda v: rfft.irfft3d(
+                    v, nz, self.mesh, self.decomp, self.opts,
+                    strategy=strat))
+            else:
+                donate = (0,) if self.problem == "c2c" else ()
+                fn = jax.jit(jax.vmap(self._inv), donate_argnums=donate)
+        elif kind == "filtered":
+            donate = (0,) if self.problem == "c2c" else ()
+            fn = jax.jit(jax.vmap(self._filtered_fn()),
+                         donate_argnums=donate)
+        else:
+            raise ValueError(f"unknown batched kind {kind!r}")
+        self._batched[kind] = fn
+        return fn
+
+    def forward_batched(self, x: jax.Array) -> jax.Array:
+        """``forward`` over a (B, Nx, Ny, Nz) stack — same per-stage
+        collective count as B=1, results bitwise equal to B calls of
+        :meth:`forward`.  c2c donates ``x``."""
+        return self._batched_fn("forward")(x)
+
+    def inverse_batched(self, y: jax.Array) -> jax.Array:
+        """``inverse`` over a (B, ...) spectrum stack (see
+        :meth:`forward_batched`)."""
+        return self._batched_fn("inverse")(y)
+
+    def forward_filtered_batched(self, x: jax.Array,
+                                 h: jax.Array) -> jax.Array:
+        """:meth:`forward_filtered` over (B, ...) field and filter stacks
+        (each request brings its own ``h``)."""
+        return self._batched_fn("filtered")(x, h)
+
+    def batched_sharding(self, which: str = "input"):
+        """``input_sharding``/``output_sharding`` widened with a leading
+        replicated batch axis (how the service places stacked payloads)."""
+        base = (self.input_sharding if which == "input"
+                else self.output_sharding)
+        if base is None:
+            return None
+        return NamedSharding(self.mesh, P(None, *base.spec))
+
+    def release(self) -> None:
+        """Drop this plan's compiled executables (compile-cache hygiene:
+        the serving plan cache calls this on eviction so shape diversity
+        cannot grow XLA's live-executable set without bound)."""
+        fns = [self._fwd, self._inv, self._fwd_filtered]
+        fns += list((self._batched or {}).values())
+        for fn in fns:
+            clear = getattr(fn, "clear_cache", None)
+            if clear is not None:
+                try:
+                    clear()
+                except Exception:
+                    pass  # best effort: an evicted plan must never raise
+        self._fwd_filtered = None
+        self._batched = None
 
     # -- autotuning ----------------------------------------------------------
     @classmethod

@@ -48,12 +48,40 @@ class Decomposition:
     axes: tuple  # of str or tuple[str, ...]
 
     def __post_init__(self):
+        # canonicalize lists (e.g. from JSON round trips) to tuples so
+        # every Decomposition is hashable and two equal plans hash equal
+        # — plan-cache keys depend on this
+        object.__setattr__(self, "axes", tuple(
+            tuple(a) if isinstance(a, list) else a for a in self.axes))
         expect = {"slab": 1, "pencil": 2, "cell": 3}
         if self.kind not in expect:
             raise ValueError(f"unknown decomposition kind {self.kind!r}")
         if len(self.axes) != expect[self.kind]:
             raise ValueError(
                 f"{self.kind} needs {expect[self.kind]} mesh axes, got {self.axes}")
+
+    # -- canonical string form (plan-cache / wisdom keys) -------------------
+    def to_token(self) -> str:
+        """Canonical string form, e.g. ``pencil[y,z]`` / ``pencil[pod+data,z]``
+        (folded axis groups join with ``+``).  Round trips through
+        :meth:`from_token`; mesh axis names must avoid ``[ ] , +``."""
+        def axis_s(a):
+            return "+".join(a) if isinstance(a, tuple) else a
+        return f"{self.kind}[{','.join(axis_s(a) for a in self.axes)}]"
+
+    @classmethod
+    def from_token(cls, token: str) -> "Decomposition":
+        """Inverse of :meth:`to_token`."""
+        if not token.endswith("]") or "[" not in token:
+            raise ValueError(f"malformed decomposition token {token!r}")
+        kind, _, axes_s = token[:-1].partition("[")
+        axes = []
+        for part in axes_s.split(","):
+            if not part:
+                raise ValueError(f"malformed decomposition token {token!r}")
+            groups = part.split("+")
+            axes.append(tuple(groups) if len(groups) > 1 else groups[0])
+        return cls(kind, tuple(axes))
 
     def axis_sizes(self, mesh: MeshLike) -> tuple[int, ...]:
         sizes = _mesh_axis_sizes(mesh)

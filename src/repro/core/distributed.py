@@ -127,6 +127,42 @@ class FFTOptions:
                              f"{self.TRANSPOSE_IMPLS}, got "
                              f"{self.transpose_impl!r}")
 
+    # -- canonical string form (plan-cache / wisdom keys) -------------------
+    def to_token(self) -> str:
+        """Canonical string form covering EVERY knob that changes the
+        compiled executable — the plan-cache key fragment.  Per-stage
+        3-tuples join with ``-`` (impl/mode names contain no ``-``), e.g.
+        ``k2/matmul-stockham-xla/natural/ring/pipelined-unrolled-unrolled``
+        with ``/noplan`` appended when ``plan_cache=False``.  Round trips
+        through :meth:`from_token` (``__post_init__`` re-canonicalizes,
+        so token -> options -> token is the identity)."""
+        def join(v):
+            return "-".join(v) if isinstance(v, tuple) else v
+        tok = (f"k{self.overlap_k}/{join(self.local_impl)}/"
+               f"{self.output_layout}/{self.transpose_impl}/"
+               f"{join(self.overlap_mode)}")
+        if not self.plan_cache:
+            tok += "/noplan"
+        return tok
+
+    @classmethod
+    def from_token(cls, token: str) -> "FFTOptions":
+        """Inverse of :meth:`to_token`."""
+        parts = token.split("/")
+        plan_cache = True
+        if parts and parts[-1] == "noplan":
+            plan_cache = False
+            parts = parts[:-1]
+        if len(parts) != 5 or not parts[0].startswith("k"):
+            raise ValueError(f"malformed FFTOptions token {token!r}")
+
+        def split(v):
+            items = v.split("-")
+            return tuple(items) if len(items) > 1 else v
+        return cls(overlap_k=int(parts[0][1:]), local_impl=split(parts[1]),
+                   output_layout=parts[2], transpose_impl=parts[3],
+                   overlap_mode=split(parts[4]), plan_cache=plan_cache)
+
     def stage_impl(self, stage: int) -> str:
         """Local 1-D implementation for the given pipeline stage."""
         if isinstance(self.local_impl, tuple):

@@ -1,0 +1,38 @@
+"""repro.serve — plan-cached, continuously batched spectral transforms.
+
+The serving layer over the PR 1-5 stack (ROADMAP item 2): heterogeneous
+transform requests (shape x dtype x {c2c, r2c, filtered} x direction)
+arrive on an async queue, are bucketed by compiled-executable identity,
+stacked into the batched packed pipelines — which PR 5 made free at the
+collective level: a (B, ...) stack compiles to the SAME per-stage
+collective count as B=1 — and dispatched with donated buffers.
+
+Plan selection is FFTW's planner-in-production: the first request of a
+problem key pays only ``mode="wisdom"``/``"model"`` (zero execution),
+a background thread upgrades hot keys with ``mode="measure"`` and merges
+the winner into the wisdom store atomically, and an LRU cap with
+``Croft3D.release()`` keeps the compiled-executable set bounded under
+shape diversity.
+
+    from repro.serve import TransformService
+    with TransformService(mesh, max_batch=8, wisdom_path="wisdom.json",
+                          measure_after=32) as svc:
+        spectrum = svc.transform(field, problem="r2c")
+
+Benchmarked by ``benchmarks/serve_bench.py`` (``BENCH_serve.json``):
+p50/p99 latency vs offered QPS under a synthetic open-loop load, batch
+occupancy, plan-cache hit rate, and a deterministic collective-count
+batching gate.
+"""
+
+from repro.serve.batcher import Batcher, Bucket, padded_size, stack_and_pad
+from repro.serve.plan_cache import CachedPlan, CacheStats, PlanCache
+from repro.serve.request import (DIRECTIONS, PROBLEMS, TransformRequest,
+                                 TransformResult, bucket_key)
+from repro.serve.service import TransformService
+
+__all__ = [
+    "Batcher", "Bucket", "CacheStats", "CachedPlan", "DIRECTIONS",
+    "PROBLEMS", "PlanCache", "TransformRequest", "TransformResult",
+    "TransformService", "bucket_key", "padded_size", "stack_and_pad",
+]

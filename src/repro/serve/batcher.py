@@ -1,0 +1,119 @@
+"""Continuous batcher: bucket requests by executable, pad to size buckets.
+
+Batching policy (the vLLM-style continuous-batching loop, specialized to
+transforms where every request in a bucket is the *same* computation):
+
+  * requests are grouped by :func:`repro.serve.request.bucket_key` —
+    same compiled executable, so stacking is free at the collective
+    level (PR 5: a (B, ...) stack runs the SAME per-stage collective
+    count as B=1);
+  * a bucket dispatches when it reaches ``max_batch`` or when its oldest
+    request has waited ``max_wait_s`` (latency bound under low load);
+  * the stacked batch is zero-padded up to the next power of two
+    (:func:`padded_size`), so each bucket compiles at most
+    ``log2(max_batch) + 1`` distinct batched executables — compile-cache
+    hygiene against occupancy diversity.  Padding rows are dead weight
+    the collectives carry; occupancy (real / padded) is the efficiency
+    metric the bench reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serve.request import TransformRequest
+
+
+def padded_size(n: int, max_batch: int) -> int:
+    """Next power of two >= n, capped at ``max_batch`` (n <= max_batch)."""
+    if n < 1:
+        raise ValueError("empty batch")
+    if n > max_batch:
+        raise ValueError(f"batch of {n} exceeds max_batch={max_batch}")
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, max_batch)
+
+
+def stack_and_pad(arrays: Sequence[np.ndarray], pad_to: int) -> np.ndarray:
+    """Stack host payloads into a (pad_to, ...) batch, zero rows beyond
+    ``len(arrays)`` (zeros transform to zeros — dead but harmless)."""
+    batch = np.zeros((pad_to,) + tuple(arrays[0].shape), arrays[0].dtype)
+    for i, a in enumerate(arrays):
+        batch[i] = a
+    return batch
+
+
+@dataclasses.dataclass
+class Bucket:
+    """Pending same-executable requests awaiting dispatch."""
+
+    key: str
+    requests: list = dataclasses.field(default_factory=list)
+    t_oldest: float = 0.0
+
+    def add(self, req: TransformRequest, now: float) -> None:
+        if not self.requests:
+            self.t_oldest = now
+        self.requests.append(req)
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+class Batcher:
+    """Accumulates requests into per-executable buckets and decides when
+    each dispatches.  Not thread-safe by itself — the service's single
+    worker thread owns it."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.002):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._buckets: dict[str, Bucket] = {}
+
+    def add(self, key: str, req: TransformRequest,
+            now: Optional[float] = None) -> None:
+        now = time.monotonic() if now is None else now
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = Bucket(key)
+        bucket.add(req, now)
+
+    def pop_ready(self, now: Optional[float] = None) -> list[Bucket]:
+        """Buckets due for dispatch: full, or oldest request past the
+        wait budget.  Popped buckets leave the pending set."""
+        now = time.monotonic() if now is None else now
+        ready = [b for b in self._buckets.values()
+                 if len(b) >= self.max_batch
+                 or (now - b.t_oldest) >= self.max_wait_s]
+        for b in ready:
+            del self._buckets[b.key]
+        return ready
+
+    def pop_all(self) -> list[Bucket]:
+        """Drain every pending bucket (shutdown path)."""
+        out = list(self._buckets.values())
+        self._buckets.clear()
+        return out
+
+    def next_deadline(self, now: Optional[float] = None) -> Optional[float]:
+        """Seconds until the earliest wait-budget expiry (None = empty);
+        the worker uses it as its queue-poll timeout so dispatch never
+        oversleeps a latency bound."""
+        if not self._buckets:
+            return None
+        now = time.monotonic() if now is None else now
+        expiry = min(b.t_oldest + self.max_wait_s
+                     for b in self._buckets.values())
+        return max(0.0, expiry - now)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(b) for b in self._buckets.values())

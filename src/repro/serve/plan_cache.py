@@ -1,0 +1,225 @@
+"""Plan cache — FFTW's planner-in-production, fronting ``repro.tuning``.
+
+The serving story for plan selection (ROADMAP item 2):
+
+  cold   the FIRST request of a problem key builds its plan with
+         ``mode="wisdom"`` — a stored plan if the wisdom file has one,
+         otherwise the zero-execution analytic model (FFTW ESTIMATE).
+         Nothing is ever timed on the request path.
+  warm   once a key turns hot (``measure_after`` dispatches), a
+         background thread re-plans it with ``mode="measure"`` (FFTW
+         PATIENT) and atomically merges the measured winner into the
+         wisdom store (``tuning.upgrade_wisdom``).  The cache swaps the
+         measured plan in; every later process starts warm from wisdom.
+  hit    every other request reuses the cached, already-compiled plan.
+
+Hygiene: shape diversity is the production hazard — every distinct
+(shape, dtype, problem) compiles its own executables, and XLA's compile
+cache grows without bound.  The cache is LRU-capped at ``max_plans``;
+eviction calls ``Croft3D.release()`` which drops the plan's compiled
+executables, so the live-executable set tracks the working set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    upgrades: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "upgrades": self.upgrades,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+@dataclasses.dataclass
+class CachedPlan:
+    """A cached ``Croft3D`` plus its serving lifecycle state."""
+
+    plan: object                 # Croft3D
+    key: str
+    state: str                   # "cold" (model/wisdom-model) | "warm"
+    hits: int = 0
+    last_used: int = 0           # monotonic use counter (LRU order)
+    upgrading: bool = False
+
+
+class PlanCache:
+    """LRU plan cache keyed by the wisdom problem key.
+
+    ``mesh=None`` serves single-device plans (nothing to tune; every
+    plan is built directly and stays "warm" — there is no better plan to
+    measure).  With a mesh, plans come from the tuner: cold =
+    wisdom-or-model, and ``measure_after=N`` arms the background
+    measurement upgrade after N dispatches of a key.
+    """
+
+    def __init__(self, mesh=None, *, max_plans: int = 16,
+                 wisdom_path: Optional[str] = None,
+                 measure_after: Optional[int] = None,
+                 upgrade_async: bool = True,
+                 tune_kw: Optional[dict] = None):
+        if max_plans < 1:
+            raise ValueError("max_plans must be >= 1")
+        self.mesh = mesh
+        self.max_plans = max_plans
+        self.wisdom_path = wisdom_path
+        self.measure_after = measure_after
+        self.upgrade_async = upgrade_async
+        self.tune_kw = dict(tune_kw or {})
+        self.stats = CacheStats()
+        self._plans: dict[str, CachedPlan] = {}
+        self._clock = 0
+        self._lock = threading.RLock()
+        self._upgrade_threads: list[threading.Thread] = []
+
+    # -- keys ---------------------------------------------------------------
+    def key_for(self, shape, dtype, problem: str) -> str:
+        """The wisdom key this (shape, dtype, problem) plans under — the
+        same string the tuner reads/writes, so cache misses warm-start
+        from whatever wisdom previous runs persisted."""
+        from repro.tuning import wisdom_key
+        if self.mesh is None:
+            return wisdom_key(shape, {}, jnp.dtype(dtype), "local", problem)
+        return wisdom_key(shape, dict(self.mesh.shape), jnp.dtype(dtype),
+                          jax.default_backend(), problem)
+
+    # -- lookup/build -------------------------------------------------------
+    def get(self, shape, dtype=jnp.complex64, problem: str = "c2c"
+            ) -> CachedPlan:
+        """The plan for (shape, dtype, problem): cached, or built cold."""
+        key = self.key_for(shape, dtype, problem)
+        with self._lock:
+            cp = self._plans.get(key)
+            if cp is not None:
+                self.stats.hits += 1
+                self._touch(cp)
+                self._maybe_upgrade(cp)
+                return cp
+            self.stats.misses += 1
+            cp = self._build(key, tuple(shape), jnp.dtype(dtype), problem)
+            self._plans[key] = cp
+            self._touch(cp)
+            while len(self._plans) > self.max_plans:
+                self._evict_lru(keep=key)
+            return cp
+
+    def _touch(self, cp: CachedPlan) -> None:
+        self._clock += 1
+        cp.last_used = self._clock
+        cp.hits += 1
+
+    def _build(self, key: str, shape, dtype, problem: str) -> CachedPlan:
+        from repro.core.api import Croft3D
+        if self.mesh is None:
+            # single device: nothing to tune, and nothing to upgrade to
+            plan = Croft3D(shape, dtype=dtype, problem=problem)
+            return CachedPlan(plan=plan, key=key, state="warm")
+        plan = Croft3D.tuned(shape, self.mesh, mode="wisdom",
+                             wisdom_path=self.wisdom_path, dtype=dtype,
+                             problem=problem, **self.tune_kw)
+        measured = (plan.tune_result is not None
+                    and plan.tune_result.measured_s is not None)
+        return CachedPlan(plan=plan, key=key,
+                          state="warm" if measured else "cold")
+
+    def _evict_lru(self, keep: str) -> None:
+        victims = [cp for cp in self._plans.values()
+                   if cp.key != keep and not cp.upgrading]
+        if not victims:
+            return
+        victim = min(victims, key=lambda cp: cp.last_used)
+        del self._plans[victim.key]
+        self.stats.evictions += 1
+        victim.plan.release()  # compile-cache hygiene
+
+    # -- background measurement upgrade ------------------------------------
+    def _maybe_upgrade(self, cp: CachedPlan) -> None:
+        if (self.measure_after is None or self.mesh is None
+                or cp.state != "cold" or cp.upgrading
+                or cp.hits < self.measure_after):
+            return
+        cp.upgrading = True
+        if self.upgrade_async:
+            t = threading.Thread(target=self._upgrade, args=(cp,),
+                                 daemon=True, name=f"plan-upgrade-{cp.key}")
+            self._upgrade_threads.append(t)
+            t.start()
+        else:
+            self._upgrade(cp)
+
+    def _upgrade(self, cp: CachedPlan) -> None:
+        """Measure-mode re-plan of a hot key, off the request path.
+
+        Compiles and times the model-ranked top candidates on the live
+        mesh, merges the winner into the wisdom store (atomic, locked —
+        see ``tuning.wisdom.merge_entries``), and swaps the measured plan
+        into the cache.  In-flight dispatches keep using the old plan
+        object; the swap is a reference replacement, not a mutation.
+        """
+        from repro.core.api import Croft3D
+        try:
+            from repro import tuning
+            result = tuning.upgrade_wisdom(
+                cp.plan.shape, self.mesh, dtype=cp.plan.dtype,
+                problem=cp.plan.problem, wisdom_path=self.wisdom_path,
+                **self.tune_kw)
+            plan = Croft3D(cp.plan.shape, self.mesh, result.decomp,
+                           result.opts, dtype=cp.plan.dtype,
+                           problem=cp.plan.problem, strategy=result.strategy)
+            plan.tune_result = result
+            with self._lock:
+                old = self._plans.get(cp.key)
+                new = CachedPlan(plan=plan, key=cp.key, state="warm",
+                                 hits=cp.hits, last_used=cp.last_used)
+                self._plans[cp.key] = new
+                self.stats.upgrades += 1
+                if old is not None and old.plan is not plan:
+                    old.plan.release()
+        except Exception:
+            # an upgrade failure must never take the service down; the
+            # cold plan keeps serving and the next hit may retry
+            with self._lock:
+                cp.upgrading = False
+
+    def wait_idle(self, timeout: Optional[float] = None) -> None:
+        """Join outstanding upgrade threads (tests and orderly shutdown)."""
+        with self._lock:
+            threads = list(self._upgrade_threads)
+            self._upgrade_threads = [t for t in threads if t.is_alive()]
+        for t in threads:
+            t.join(timeout)
+
+    # -- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return list(self._plans)
+
+    def snapshot(self) -> dict:
+        """Stats + per-key lifecycle state, for logs and the bench JSON."""
+        with self._lock:
+            return {
+                "stats": self.stats.as_dict(),
+                "plans": {k: {"state": cp.state, "hits": cp.hits}
+                          for k, cp in self._plans.items()},
+            }

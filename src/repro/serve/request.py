@@ -1,0 +1,149 @@
+"""Request/result types for the spectral transform service.
+
+A :class:`TransformRequest` is the service's wire unit: one field (or
+spectrum, for inverse requests) plus the problem description that picks
+the executable.  Requests carry *host* arrays — like RPC payloads — and
+results come back as host arrays, so service latency honestly includes
+the H2D/D2H hops a real deployment pays.
+
+Problem classes (ISSUE/ROADMAP item 2):
+
+  "c2c"       complex transform, forward or inverse
+  "r2c"       real transform (forward: real field -> half spectrum;
+              inverse: half spectrum + the plan's Nz -> real field)
+  "filtered"  c2c forward with a fused k-space multiply (the request
+              brings its own ``h``; the multiply rides as a schedule
+              epilogue inside the same executable)
+
+Two requests may share a batch exactly when every knob that changes the
+compiled executable matches — shape, dtype, problem, direction,
+filteredness.  :func:`bucket_key` captures that contract; the plan-cache
+key (``repro.tuning.wisdom.wisdom_key``) is its plan-selection prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Optional
+
+import numpy as np
+
+PROBLEMS = ("c2c", "r2c", "filtered")
+DIRECTIONS = ("forward", "inverse")
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class TransformRequest:
+    """One transform request (host payload + problem description)."""
+
+    x: np.ndarray
+    problem: str = "c2c"
+    direction: str = "forward"
+    #: "filtered" only: the k-space filter, shaped like the spectrum
+    h: Optional[np.ndarray] = None
+    #: global (Nx, Ny, Nz) grid shape; inferred from the payload for
+    #: forward requests, REQUIRED for r2c inverse (Nz is ambiguous there)
+    shape: Optional[tuple] = None
+    #: spectrum dtype the plan computes in
+    dtype: np.dtype = np.complex64
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    t_submit: float = dataclasses.field(default_factory=time.monotonic)
+
+    def __post_init__(self):
+        if self.problem not in PROBLEMS:
+            raise ValueError(f"problem must be one of {PROBLEMS}, "
+                             f"got {self.problem!r}")
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                             f"got {self.direction!r}")
+        if self.problem == "filtered":
+            if self.direction != "forward":
+                raise ValueError("filtered requests are forward-only (the "
+                                 "filter fuses into the forward epilogue)")
+            if self.h is None:
+                raise ValueError("filtered requests need a filter h")
+        elif self.h is not None:
+            raise ValueError('a filter rides only on problem="filtered"')
+        if getattr(self.x, "ndim", None) != 3:
+            raise ValueError("request payload must be a rank-3 array "
+                             f"(got shape {getattr(self.x, 'shape', None)})")
+        if self.shape is None:
+            if self.problem == "r2c" and self.direction == "inverse":
+                raise ValueError("r2c inverse requests must pass shape= — "
+                                 "Nz cannot be inferred from the half "
+                                 "spectrum (Nh = Nz//2 + 1 is two-to-one)")
+            self.shape = tuple(int(s) for s in self.x.shape)
+        else:
+            self.shape = tuple(int(s) for s in self.shape)
+        if len(self.shape) != 3:
+            raise ValueError(f"shape must be 3-D, got {self.shape}")
+        self.dtype = np.dtype(self.dtype)
+
+    @property
+    def plan_problem(self) -> str:
+        """The Croft3D problem class serving this request ("filtered" is
+        a c2c plan; the filter is an argument, not a different plan)."""
+        return "r2c" if self.problem == "r2c" else "c2c"
+
+    def expected_payload_shape(self) -> tuple:
+        """What ``x`` must look like for (shape, problem, direction)."""
+        nx, ny, nz = self.shape
+        if self.problem == "r2c" and self.direction == "inverse":
+            return (nx, ny, nz // 2 + 1)
+        return self.shape
+
+    def validate_payload(self) -> None:
+        """Early shape/dtype validation (raise at submit, not dispatch —
+        a malformed request must not poison a whole batch)."""
+        expect = self.expected_payload_shape()
+        if tuple(self.x.shape) != expect:
+            raise ValueError(
+                f"payload shape {tuple(self.x.shape)} != expected {expect} "
+                f"for {self.problem}/{self.direction} on grid {self.shape}")
+        if self.problem == "r2c" and self.direction == "forward":
+            if np.iscomplexobj(self.x):
+                raise ValueError("r2c forward payload must be real")
+        if self.h is not None:
+            nx, ny, nz = self.shape
+            hshape = (self.shape if self.plan_problem == "c2c"
+                      else (nx, ny, nz // 2 + 1))
+            if tuple(self.h.shape) != hshape:
+                raise ValueError(f"filter shape {tuple(self.h.shape)} != "
+                                 f"spectrum shape {hshape}")
+
+
+def bucket_key(req: TransformRequest, plan_key: str) -> str:
+    """Batchability key: requests sharing it run in ONE stacked dispatch.
+
+    ``plan_key`` (the wisdom key: shape|mesh|dtype|backend[|problem])
+    already pins shape, spectrum dtype, mesh, and plan problem class; the
+    suffix adds the per-request knobs that select a *different executable
+    on the same plan* — direction, and whether a fused filter argument is
+    present.  Omitting either would silently alias executables (a
+    forward batched with an inverse, or a filtered request dropped into
+    an unfiltered batch losing its ``h``).
+    """
+    return f"{plan_key}|{req.direction}" + ("|filt" if req.h is not None
+                                            else "")
+
+
+@dataclasses.dataclass
+class TransformResult:
+    """What the caller's future resolves to."""
+
+    req_id: int
+    value: Optional[np.ndarray]
+    ok: bool = True
+    error: Optional[str] = None
+    #: end-to-end seconds from submit to result materialization
+    latency_s: float = 0.0
+    #: how many real requests shared the dispatch, and the padded size
+    batch_size: int = 1
+    padded_size: int = 1
+    #: plan provenance: "hit" | "cold" | "warm" (see serve.plan_cache)
+    plan_state: str = "hit"
+    plan_key: str = ""

@@ -1,0 +1,265 @@
+"""The transform service: async queue -> buckets -> batched dispatch.
+
+One worker thread owns the device: it pulls requests off the queue,
+groups them by executable (:mod:`repro.serve.batcher`), resolves plans
+through the :mod:`repro.serve.plan_cache`, stacks/pads the payloads, and
+dispatches the batched transform with donated buffers.  Clients get
+``concurrent.futures.Future``s; results materialize on the host so
+latency includes the D2H hop.
+
+The loop is continuous batching in the transform setting: while the
+device runs one batch, the queue keeps filling, so the next batch forms
+from whatever arrived meanwhile — occupancy rises with offered load
+instead of being fixed at a static batch size.
+
+    with TransformService(mesh, max_batch=8) as svc:
+        fut = svc.submit(field, problem="r2c")
+        spectrum = fut.result().value
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.serve.batcher import Batcher, padded_size, stack_and_pad
+from repro.serve.plan_cache import PlanCache
+from repro.serve.request import (TransformRequest, TransformResult,
+                                 bucket_key)
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: TransformRequest
+    future: "object"  # concurrent.futures.Future[TransformResult]
+
+
+class TransformService:
+    """Plan-cached, continuously batched spectral transform service."""
+
+    def __init__(self, mesh=None, *, max_batch: int = 8,
+                 max_wait_ms: float = 2.0,
+                 cache: Optional[PlanCache] = None,
+                 wisdom_path: Optional[str] = None,
+                 max_plans: int = 16,
+                 measure_after: Optional[int] = None,
+                 tune_kw: Optional[dict] = None,
+                 latency_window: int = 4096):
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.cache = cache if cache is not None else PlanCache(
+            mesh, wisdom_path=wisdom_path, max_plans=max_plans,
+            measure_after=measure_after, tune_kw=tune_kw)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._batcher = Batcher(max_batch, self.max_wait_s)
+        self._worker: Optional[threading.Thread] = None
+        self._running = False
+        self._lock = threading.Lock()
+        # aggregate stats (worker-thread writes, stats() reads)
+        self._n_requests = 0
+        self._n_batches = 0
+        self._real_rows = 0
+        self._padded_rows = 0
+        self._batch_hist: dict[int, int] = {}
+        self._latencies = collections.deque(maxlen=latency_window)
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "TransformService":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="transform-service")
+        self._worker.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker; ``drain=True`` serves everything already
+        queued first (in-flight futures never dangle)."""
+        with self._lock:
+            if not self._running:
+                return
+            self._running = False
+        self._queue.put(None)  # wake the worker
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if drain:
+            self._drain_all()
+        else:
+            self._fail_pending("service stopped")
+        self.cache.wait_idle(timeout=30.0)
+
+    def __enter__(self) -> "TransformService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, x, *, problem: str = "c2c", direction: str = "forward",
+               h=None, shape=None, dtype=None):
+        """Enqueue one transform; returns a Future[TransformResult].
+
+        Payloads are host arrays (the wire format); validation happens
+        here, synchronously, so a malformed request raises at the call
+        site instead of poisoning a batch."""
+        if not self._running:
+            raise RuntimeError("service not started (use `with service:` "
+                               "or service.start())")
+        req = TransformRequest(
+            x=np.asarray(x), problem=problem, direction=direction,
+            h=None if h is None else np.asarray(h), shape=shape,
+            dtype=np.complex64 if dtype is None else dtype)
+        req.validate_payload()
+        import concurrent.futures
+        fut = concurrent.futures.Future()
+        self._queue.put(_Pending(req, fut))
+        return fut
+
+    def transform(self, x, **kw) -> np.ndarray:
+        """Synchronous convenience: submit, wait, unwrap (raises on a
+        failed request)."""
+        res = self.submit(x, **kw).result()
+        if not res.ok:
+            raise RuntimeError(f"transform failed: {res.error}")
+        return res.value
+
+    # -- worker -------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            deadline = self._batcher.next_deadline()
+            timeout = 0.05 if deadline is None else min(deadline, 0.05)
+            try:
+                item = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                item = False  # timeout tick: check wait budgets below
+            if item is None:
+                return  # stop() sentinel; stop() handles the remainder
+            if item is not False:
+                self._batcher.add(self._bucket_key(item.req), item)
+            for bucket in self._batcher.pop_ready():
+                self._dispatch(bucket)
+
+    def _bucket_key(self, req: TransformRequest) -> str:
+        return bucket_key(req, self.cache.key_for(
+            req.shape, req.dtype, req.plan_problem))
+
+    def _drain_all(self) -> None:
+        """Serve every queued/pending request (shutdown, tests)."""
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and item is not False:
+                self._batcher.add(self._bucket_key(item.req), item)
+        for bucket in self._batcher.pop_all():
+            self._dispatch(bucket)
+
+    def _fail_pending(self, msg: str) -> None:
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and item is not False:
+                item.future.set_result(TransformResult(
+                    req_id=item.req.req_id, value=None, ok=False, error=msg))
+        for bucket in self._batcher.pop_all():
+            for p in bucket.requests:
+                p.future.set_result(TransformResult(
+                    req_id=p.req.req_id, value=None, ok=False, error=msg))
+
+    # -- dispatch -----------------------------------------------------------
+    def _dispatch(self, bucket) -> None:
+        pendings = bucket.requests
+        req0 = pendings[0].req
+        try:
+            cp = self.cache.get(req0.shape, req0.dtype, req0.plan_problem)
+            out = self._execute(cp.plan, pendings)
+            t_done = time.monotonic()
+            n, padded = len(pendings), out.shape[0]
+            for i, p in enumerate(pendings):
+                p.future.set_result(TransformResult(
+                    req_id=p.req.req_id, value=out[i],
+                    latency_s=t_done - p.req.t_submit, batch_size=n,
+                    padded_size=padded, plan_state=cp.state,
+                    plan_key=cp.key))
+            self._n_requests += n
+            self._n_batches += 1
+            self._real_rows += n
+            self._padded_rows += padded
+            self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
+            for p in pendings:
+                self._latencies.append(t_done - p.req.t_submit)
+        except Exception as e:  # resolve futures, never kill the worker
+            msg = f"{type(e).__name__}: {e}"
+            for p in pendings:
+                if not p.future.done():
+                    p.future.set_result(TransformResult(
+                        req_id=p.req.req_id, value=None, ok=False,
+                        error=msg))
+
+    def _execute(self, plan, pendings) -> np.ndarray:
+        """Stack, pad, place, run the batched executable, fetch to host."""
+        req0 = pendings[0].req
+        n = len(pendings)
+        padded = padded_size(n, self.max_batch)
+        forward = req0.direction == "forward"
+        in_dtype = (plan.input_dtype if forward else plan.dtype)
+        xs = stack_and_pad([p.req.x for p in pendings],
+                           padded).astype(in_dtype, copy=False)
+        xd = self._place(xs, plan.batched_sharding(
+            "input" if forward else "output"))
+        if req0.h is not None:
+            hs = stack_and_pad([p.req.h for p in pendings],
+                               padded).astype(plan.dtype, copy=False)
+            hd = self._place(hs, plan.batched_sharding("output"))
+            out = plan.forward_filtered_batched(xd, hd)
+        elif forward:
+            out = plan.forward_batched(xd)
+        else:
+            out = plan.inverse_batched(xd)
+        return np.asarray(jax.device_get(out))
+
+    @staticmethod
+    def _place(host: np.ndarray, sharding):
+        if sharding is None:
+            return jax.numpy.asarray(host)
+        return jax.device_put(host, sharding)
+
+    # -- stats --------------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving counters: occupancy, batch histogram, latency
+        quantiles over the recent window, plan-cache stats."""
+        lats = sorted(self._latencies)
+
+        def q(p):
+            if not lats:
+                return None
+            return lats[min(len(lats) - 1, int(p * len(lats)))] * 1e3
+
+        return {
+            "requests": self._n_requests,
+            "batches": self._n_batches,
+            "mean_batch": (self._n_requests / self._n_batches
+                           if self._n_batches else 0.0),
+            "real_rows": self._real_rows,
+            "padded_rows": self._padded_rows,
+            "occupancy": (self._real_rows / self._padded_rows
+                          if self._padded_rows else 0.0),
+            "batch_hist": dict(sorted(self._batch_hist.items())),
+            "pending": self._batcher.pending + self._queue.qsize(),
+            "latency_ms": {"p50": q(0.50), "p90": q(0.90), "p99": q(0.99)},
+            "plan_cache": self.cache.snapshot(),
+        }

@@ -52,13 +52,14 @@ from repro.tuning.candidates import (Candidate, default_candidate,
 from repro.tuning.cost_model import (CostBreakdown, analytic_cost,
                                      hlo_collectives, rank_candidates)
 from repro.tuning.measure import measure_candidate, time_forward
-from repro.tuning.planner import MODES, TuneResult, tune
-from repro.tuning.wisdom import Wisdom, WisdomEntry, load_seed, wisdom_key
+from repro.tuning.planner import MODES, TuneResult, tune, upgrade_wisdom
+from repro.tuning.wisdom import (Wisdom, WisdomEntry, load_seed,
+                                 merge_entries, wisdom_key)
 
 __all__ = [
     "Candidate", "CostBreakdown", "MODES", "TuneResult", "Wisdom",
     "WisdomEntry", "analytic_cost", "decompositions_for",
     "default_candidate", "enumerate_candidates", "hlo_collectives",
-    "load_seed", "measure_candidate", "rank_candidates", "time_forward",
-    "tune", "wisdom_key",
+    "load_seed", "measure_candidate", "merge_entries", "rank_candidates",
+    "time_forward", "tune", "upgrade_wisdom", "wisdom_key",
 ]

@@ -63,10 +63,40 @@ class Candidate:
         base = (f"{self.decomp.kind}[{axes}]/k{o.overlap_k}/"
                 f"{_impl_str(o.local_impl)}/"
                 f"{o.output_layout}/{o.transpose_impl}"
+                + ("" if o.overlap_mode == "pipelined"
+                   else f"/{_impl_str(o.overlap_mode)}")
                 + ("" if o.plan_cache else "/noplan"))
         if self.problem != "c2c":
             base += f"/{self.problem}-{self.strategy}"
         return base
+
+    # -- canonical string form ----------------------------------------------
+    #
+    # ``label`` is for humans (it elides default knobs); ``plan_key`` is
+    # for caches: it covers every field that changes the compiled
+    # executable and round trips exactly, including the per-stage
+    # ``local_impl``/``overlap_mode`` 3-tuples.
+
+    @property
+    def plan_key(self) -> str:
+        key = f"{self.decomp.to_token()}|{self.opts.to_token()}"
+        if self.problem != "c2c":
+            key += f"|{self.problem}:{self.strategy}"
+        return key
+
+    @classmethod
+    def from_plan_key(cls, key: str) -> "Candidate":
+        """Inverse of :attr:`plan_key`."""
+        parts = key.split("|")
+        if len(parts) not in (2, 3):
+            raise ValueError(f"malformed plan key {key!r}")
+        decomp = Decomposition.from_token(parts[0])
+        opts = FFTOptions.from_token(parts[1])
+        if len(parts) == 2:
+            return cls(decomp, opts)
+        problem, _, strategy = parts[2].partition(":")
+        return cls(decomp, opts, problem=problem,
+                   strategy=strategy or None)
 
 
 def _groupings(names: Sequence[str], k: int) -> Iterator[tuple]:

@@ -185,5 +185,25 @@ def tune(shape: Sequence[int], mesh=None, *,
 
     wis.record(key, entry)
     if save and wis.path:
-        wis.save()
+        # reload-merge-rename under a lock: concurrent tuners (several
+        # service processes, or the serving plan cache's background
+        # measurement thread) fold entries together instead of clobbering
+        # each other's writes
+        wisdom_lib.merge_entries(wis.path, {key: entry})
     return result
+
+
+def upgrade_wisdom(shape, mesh, *, dtype=jnp.complex64, problem: str = "c2c",
+                   batch: int = 1, wisdom_path: Optional[str] = None,
+                   **tune_kw) -> TuneResult:
+    """FFTW's planner-in-production upgrade hook: re-plan one problem in
+    ``mode="measure"`` and merge the winner into the wisdom store.
+
+    This is what the serving plan cache's background thread calls once a
+    key turns hot: the cold request paid only ``mode="model"``; this pays
+    the compile-and-time cost off the request path and persists the
+    measured plan (atomically, via :func:`repro.tuning.wisdom.merge_entries`)
+    so every later process starts warm.
+    """
+    return tune(shape, mesh, mode="measure", dtype=dtype, problem=problem,
+                batch=batch, wisdom_path=wisdom_path, **tune_kw)

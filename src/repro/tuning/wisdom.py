@@ -17,10 +17,19 @@ Command line (FFTW's ``fftw-wisdom`` tool analogue)::
 
     python -m repro.tuning.wisdom merge OUT.json [IN.json ...] [--seed]
     python -m repro.tuning.wisdom show PATH.json
+    python -m repro.tuning.wisdom stats PATH.json
 
 ``--seed`` folds in the shipped seed wisdom (``seed_wisdom.json``,
 model-mode plans for common shape/mesh/problem combinations; measured
 entries from your own runs always take precedence on merge).
+
+Concurrency: the serving plan cache's background measurement thread
+writes wisdom while requests are in flight, and several service
+processes may share one wisdom file.  All persistent writes therefore go
+through :func:`merge_entries` — reload-latest + record + write-to-temp +
+atomic rename, serialized by a lock file — so concurrent writers merge
+instead of clobbering each other's entries (last-loader-wins lost
+updates).
 """
 
 from __future__ import annotations
@@ -193,6 +202,75 @@ class Wisdom:
         return len(self.entries)
 
 
+class _FileLock:
+    """Tiny advisory lock: ``path.lock`` created O_EXCL, retried with
+    backoff.  Stale locks (a writer that died mid-merge) are broken after
+    ``stale_s`` so a crashed upgrade thread cannot wedge the service."""
+
+    def __init__(self, path: str, timeout: float = 10.0,
+                 stale_s: float = 30.0):
+        self.path, self.timeout, self.stale_s = path, timeout, stale_s
+
+    def __enter__(self):
+        deadline = time.monotonic() + self.timeout
+        while True:
+            try:
+                fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                os.write(fd, str(os.getpid()).encode())
+                os.close(fd)
+                return self
+            except FileExistsError:
+                try:
+                    age = time.time() - os.path.getmtime(self.path)
+                    if age > self.stale_s:
+                        os.unlink(self.path)  # break a dead writer's lock
+                        continue
+                except OSError:
+                    continue  # holder released between stat and unlink
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"could not acquire wisdom lock {self.path}")
+                time.sleep(0.02)
+
+    def __exit__(self, *exc):
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+
+def merge_entries(path: str, entries: Mapping[str, WisdomEntry]) -> int:
+    """Merge ``entries`` into the wisdom file at ``path`` atomically.
+
+    Safe under concurrent writers: reload the latest file contents under
+    a lock file, fold the new entries in (``better_of`` per key), write
+    to a temp file and rename.  Returns the merged store's size.  This
+    is the single write path for production wisdom — the planner's
+    ``save=True`` and the serving plan cache's background measurement
+    thread both land here.
+    """
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with _FileLock(path + ".lock"):
+        w = Wisdom.load(path)
+        w.path = path
+        for key, entry in entries.items():
+            w.record(key, entry)
+        w.save(path)
+        return len(w)
+
+
+def merge_files(out: str, inputs: Sequence[str],
+                include_seed: bool = False) -> int:
+    """CLI ``merge``: fold wisdom files into ``out`` under the same lock
+    discipline as :func:`merge_entries`."""
+    folded = Wisdom()
+    if include_seed:
+        folded.merge(load_seed())
+    for p in inputs:
+        folded.merge(Wisdom.load(p))
+    return merge_entries(out, folded.entries)
+
+
 def load_seed() -> "Wisdom":
     """The shipped seed wisdom (model-mode plans for common problems).
 
@@ -224,18 +302,17 @@ def _main(argv=None) -> int:
                     help="also fold in the shipped seed wisdom")
     sp = sub.add_parser("show", help="print a wisdom file's entries")
     sp.add_argument("path")
+    tp = sub.add_parser("stats", help="summarize a wisdom file: keys, "
+                                      "modes, staleness")
+    tp.add_argument("path")
     args = ap.parse_args(argv)
 
     if args.cmd == "merge":
-        w = Wisdom.load(args.out)
-        w.path = args.out
-        if args.seed:
-            w.merge(load_seed())
-        for p in args.inputs:
-            w.merge(Wisdom.load(p))
-        w.save(args.out)
-        print(f"wrote {len(w)} entries -> {args.out}")
+        n = merge_files(args.out, args.inputs, include_seed=args.seed)
+        print(f"wrote {n} entries -> {args.out}")
         return 0
+    if args.cmd == "stats":
+        return _stats(args.path)
     w = Wisdom.load(args.path)
     for key in sorted(w.entries):
         e = w.entries[key]
@@ -248,6 +325,56 @@ def _main(argv=None) -> int:
             label = "<unreadable entry>"
         print(f"{key}\n    [{e.source}] {label} ({t})")
     print(f"{len(w)} entries")
+    return 0
+
+
+def _age_s(entry: WisdomEntry, now: float) -> Optional[float]:
+    return None if entry.created is None else max(0.0, now - entry.created)
+
+
+def _fmt_age(age: Optional[float]) -> str:
+    if age is None:
+        return "age unknown"
+    for unit, span in (("d", 86400.0), ("h", 3600.0), ("m", 60.0)):
+        if age >= span:
+            return f"{age / span:.1f}{unit} old"
+    return f"{age:.0f}s old"
+
+
+def _stats(path: str) -> int:
+    """CLI ``stats``: per-key mode/problem/staleness, aggregate counts.
+
+    Staleness matters in production: "model" entries are cold estimates
+    awaiting a background measurement upgrade, and very old "measure"
+    entries predate current code/hardware — both are re-tune candidates.
+    """
+    w = Wisdom.load(path)
+    now = time.time()
+    by_source: dict[str, int] = {}
+    by_problem: dict[str, int] = {}
+    ages = []
+    for key in sorted(w.entries):
+        e = w.entries[key]
+        by_source[e.source] = by_source.get(e.source, 0) + 1
+        by_problem[e.problem] = by_problem.get(e.problem, 0) + 1
+        age = _age_s(e, now)
+        if age is not None:
+            ages.append(age)
+        t = (f"{e.measured_s * 1e6:.0f}us measured"
+             if e.measured_s is not None else
+             f"{e.model_s * 1e6:.0f}us modeled"
+             if e.model_s is not None else "unscored")
+        print(f"{key}\n    [{e.source}/{e.problem}] {t}, {_fmt_age(age)}")
+    print(f"{len(w)} entries"
+          + (f" in {path}" if os.path.exists(path) else " (file missing)"))
+    print("  by mode:    " + (", ".join(
+        f"{k}={v}" for k, v in sorted(by_source.items())) or "-"))
+    print("  by problem: " + (", ".join(
+        f"{k}={v}" for k, v in sorted(by_problem.items())) or "-"))
+    if ages:
+        ages.sort()
+        print(f"  staleness:  newest {_fmt_age(ages[0])}, median "
+              f"{_fmt_age(ages[len(ages) // 2])}, oldest {_fmt_age(ages[-1])}")
     return 0
 
 

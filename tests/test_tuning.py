@@ -245,3 +245,49 @@ y2 = plan2.forward(jax.device_put(jnp.asarray(x), plan2.input_sharding))
 assert float(jnp.max(jnp.abs(y2 - y))) == 0.0
 print("OK tuned roundtrip err", err, "rerr", rerr)
 """, timeout=900)
+
+
+# --- canonical plan keys (serve plan cache / wisdom) -------------------------
+
+def test_decomposition_token_roundtrip():
+    for dec in (Decomposition("slab", ("model",)),
+                Decomposition("pencil", ("data", "model")),
+                Decomposition("pencil", (("pod", "data"), "model")),
+                Decomposition("cell", ("a", "b", "c"))):
+        tok = dec.to_token()
+        assert Decomposition.from_token(tok) == dec, tok
+
+
+def test_fftoptions_token_roundtrip():
+    for opts in (FFTOptions(),
+                 FFTOptions(overlap_k=4, local_impl="stockham",
+                            output_layout="spectral", transpose_impl="ring"),
+                 FFTOptions(local_impl=("matmul", "stockham", "xla"),
+                            overlap_mode=("pipelined", "unrolled",
+                                          "unrolled")),
+                 FFTOptions(plan_cache=False, overlap_k=1)):
+        tok = opts.to_token()
+        assert FFTOptions.from_token(tok) == opts, tok
+
+
+def test_candidate_plan_key_roundtrip_covers_every_knob():
+    """plan_key must round trip exactly — including the per-stage
+    3-tuples and the r2c strategy axis — so the serving cache can never
+    alias two different executables under one key."""
+    cands = tuning.enumerate_candidates(
+        SHAPE, SIZES, include_baselines=True, heterogeneous_impls=True)
+    cands += tuning.enumerate_candidates(SHAPE, SIZES, problem="r2c")
+    assert len({c.plan_key for c in cands}) == len(set(cands))
+    for c in cands:
+        back = tuning.Candidate.from_plan_key(c.plan_key)
+        assert back == c, c.plan_key
+
+
+def test_candidate_label_distinguishes_overlap_mode():
+    """Regression: the planner's measured={label: t} dict used to alias
+    candidates differing only in overlap_mode."""
+    a = tuning.Candidate(Decomposition("pencil", ("data", "model")),
+                         FFTOptions(overlap_mode="pipelined"))
+    b = tuning.Candidate(Decomposition("pencil", ("data", "model")),
+                         FFTOptions(overlap_mode="unrolled"))
+    assert a.label != b.label
