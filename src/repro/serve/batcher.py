@@ -116,4 +116,6 @@ class Batcher:
 
     @property
     def pending(self) -> int:
-        return sum(len(b) for b in self._buckets.values())
+        # list() snapshots the dict atomically (single C call under the
+        # GIL) so stats() can read this while the worker adds buckets
+        return sum(len(b) for b in list(self._buckets.values()))

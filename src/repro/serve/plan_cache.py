@@ -116,8 +116,14 @@ class PlanCache:
             cp = self._build(key, tuple(shape), jnp.dtype(dtype), problem)
             self._plans[key] = cp
             self._touch(cp)
-            while len(self._plans) > self.max_plans:
-                self._evict_lru(keep=key)
+            # _evict_lru returns False when every other plan is mid-upgrade
+            # (upgrading plans are pinned); bail rather than spin — the
+            # upgrade threads need this lock to finish, so looping here
+            # would livelock the worker.  Temporary over-capacity drains
+            # on the next miss once upgrades land.
+            while (len(self._plans) > self.max_plans
+                   and self._evict_lru(keep=key)):
+                pass
             return cp
 
     def _touch(self, cp: CachedPlan) -> None:
@@ -139,15 +145,17 @@ class PlanCache:
         return CachedPlan(plan=plan, key=key,
                           state="warm" if measured else "cold")
 
-    def _evict_lru(self, keep: str) -> None:
+    def _evict_lru(self, keep: str) -> bool:
+        """Evict the LRU evictable plan; False if none is evictable."""
         victims = [cp for cp in self._plans.values()
                    if cp.key != keep and not cp.upgrading]
         if not victims:
-            return
+            return False
         victim = min(victims, key=lambda cp: cp.last_used)
         del self._plans[victim.key]
         self.stats.evictions += 1
         victim.plan.release()  # compile-cache hygiene
+        return True
 
     # -- background measurement upgrade ------------------------------------
     def _maybe_upgrade(self, cp: CachedPlan) -> None:

@@ -29,7 +29,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from repro.serve.batcher import Batcher, padded_size, stack_and_pad
+from repro.serve.batcher import Batcher, Bucket, padded_size, stack_and_pad
 from repro.serve.plan_cache import PlanCache
 from repro.serve.request import (TransformRequest, TransformResult,
                                  bucket_key)
@@ -63,7 +63,10 @@ class TransformService:
         self._worker: Optional[threading.Thread] = None
         self._running = False
         self._lock = threading.Lock()
-        # aggregate stats (worker-thread writes, stats() reads)
+        # aggregate stats: worker-thread writes and caller-thread stats()
+        # reads share _stats_lock (iterating the deque/hist while the
+        # worker appends would raise "mutated during iteration")
+        self._stats_lock = threading.Lock()
         self._n_requests = 0
         self._n_batches = 0
         self._real_rows = 0
@@ -113,9 +116,6 @@ class TransformService:
         Payloads are host arrays (the wire format); validation happens
         here, synchronously, so a malformed request raises at the call
         site instead of poisoning a batch."""
-        if not self._running:
-            raise RuntimeError("service not started (use `with service:` "
-                               "or service.start())")
         req = TransformRequest(
             x=np.asarray(x), problem=problem, direction=direction,
             h=None if h is None else np.asarray(h), shape=shape,
@@ -123,7 +123,15 @@ class TransformService:
         req.validate_payload()
         import concurrent.futures
         fut = concurrent.futures.Future()
-        self._queue.put(_Pending(req, fut))
+        # check-and-enqueue under the lifecycle lock: stop() flips
+        # _running under the same lock, so no request can slip in after
+        # _fail_pending has swept the queue (its future would never
+        # resolve and the caller would hang on fut.result()).
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service not started (use `with "
+                                   "service:` or service.start())")
+            self._queue.put(_Pending(req, fut))
         return fut
 
     def transform(self, x, **kw) -> np.ndarray:
@@ -163,8 +171,14 @@ class TransformService:
                 break
             if item is not None and item is not False:
                 self._batcher.add(self._bucket_key(item.req), item)
+        # buckets here can exceed max_batch (leftover partial bucket plus
+        # late arrivals); chunk them, since padded_size rejects oversize
+        # and stop(drain=True) promises every queued request is served
         for bucket in self._batcher.pop_all():
-            self._dispatch(bucket)
+            reqs = bucket.requests
+            for i in range(0, len(reqs), self.max_batch):
+                self._dispatch(Bucket(bucket.key,
+                                      reqs[i:i + self.max_batch]))
 
     def _fail_pending(self, msg: str) -> None:
         while True:
@@ -195,13 +209,14 @@ class TransformService:
                     latency_s=t_done - p.req.t_submit, batch_size=n,
                     padded_size=padded, plan_state=cp.state,
                     plan_key=cp.key))
-            self._n_requests += n
-            self._n_batches += 1
-            self._real_rows += n
-            self._padded_rows += padded
-            self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
-            for p in pendings:
-                self._latencies.append(t_done - p.req.t_submit)
+            with self._stats_lock:
+                self._n_requests += n
+                self._n_batches += 1
+                self._real_rows += n
+                self._padded_rows += padded
+                self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
+                for p in pendings:
+                    self._latencies.append(t_done - p.req.t_submit)
         except Exception as e:  # resolve futures, never kill the worker
             msg = f"{type(e).__name__}: {e}"
             for p in pendings:
@@ -242,7 +257,13 @@ class TransformService:
     def stats(self) -> dict:
         """Serving counters: occupancy, batch histogram, latency
         quantiles over the recent window, plan-cache stats."""
-        lats = sorted(self._latencies)
+        with self._stats_lock:
+            lats = sorted(self._latencies)
+            n_requests = self._n_requests
+            n_batches = self._n_batches
+            real_rows = self._real_rows
+            padded_rows = self._padded_rows
+            batch_hist = dict(self._batch_hist)
 
         def q(p):
             if not lats:
@@ -250,15 +271,13 @@ class TransformService:
             return lats[min(len(lats) - 1, int(p * len(lats)))] * 1e3
 
         return {
-            "requests": self._n_requests,
-            "batches": self._n_batches,
-            "mean_batch": (self._n_requests / self._n_batches
-                           if self._n_batches else 0.0),
-            "real_rows": self._real_rows,
-            "padded_rows": self._padded_rows,
-            "occupancy": (self._real_rows / self._padded_rows
-                          if self._padded_rows else 0.0),
-            "batch_hist": dict(sorted(self._batch_hist.items())),
+            "requests": n_requests,
+            "batches": n_batches,
+            "mean_batch": (n_requests / n_batches if n_batches else 0.0),
+            "real_rows": real_rows,
+            "padded_rows": padded_rows,
+            "occupancy": (real_rows / padded_rows if padded_rows else 0.0),
+            "batch_hist": dict(sorted(batch_hist.items())),
             "pending": self._batcher.pending + self._queue.qsize(),
             "latency_ms": {"p50": q(0.50), "p90": q(0.90), "p99": q(0.99)},
             "plan_cache": self.cache.snapshot(),

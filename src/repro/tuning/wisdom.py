@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from typing import Mapping, Optional, Sequence
 
@@ -223,7 +224,7 @@ class _FileLock:
                 try:
                     age = time.time() - os.path.getmtime(self.path)
                     if age > self.stale_s:
-                        os.unlink(self.path)  # break a dead writer's lock
+                        self._break_stale()
                         continue
                 except OSError:
                     continue  # holder released between stat and unlink
@@ -231,6 +232,38 @@ class _FileLock:
                     raise TimeoutError(
                         f"could not acquire wisdom lock {self.path}")
                 time.sleep(0.02)
+
+    def _break_stale(self) -> None:
+        """Break a dead writer's lock without unlinking a live one.
+
+        A bare unlink races: two waiters can both observe staleness, the
+        first breaks the lock and re-acquires, and the second then
+        unlinks the first's *fresh* lock — two writers in the critical
+        section.  Instead, rename the lock to a unique name: rename is
+        atomic, so exactly one waiter wins (losers get ENOENT and
+        re-loop), and the winner owns the renamed file exclusively.  It
+        then re-checks staleness on the renamed file — if it actually
+        stole a fresh lock (broken and re-acquired in the stat/rename
+        window), it restores it via ``link``, which refuses to clobber
+        any newer lock."""
+        unique = f"{self.path}.stale.{os.getpid()}.{threading.get_ident()}"
+        try:
+            os.rename(self.path, unique)
+        except OSError:
+            return  # another waiter won the rename (or holder released)
+        try:
+            fresh = (time.time() - os.path.getmtime(unique)) <= self.stale_s
+        except OSError:
+            fresh = False
+        if fresh:
+            try:
+                os.link(unique, self.path)  # EEXIST if relocked meanwhile
+            except OSError:
+                pass
+        try:
+            os.unlink(unique)
+        except OSError:
+            pass
 
     def __exit__(self, *exc):
         try:

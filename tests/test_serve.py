@@ -121,6 +121,32 @@ def test_plan_cache_hits_and_lru_eviction():
                for cp in cache.snapshot()["plans"].values())
 
 
+def test_plan_cache_over_capacity_does_not_livelock():
+    """When every other plan is pinned by an in-flight upgrade, eviction
+    must bail (temporary over-capacity) instead of spinning on the lock
+    the upgrade threads need to finish."""
+    cache = PlanCache(max_plans=2)
+    cache.get((8, 8, 8))
+    cache.get((16, 16, 16))
+    for cp in cache._plans.values():
+        cp.upgrading = True  # simulate in-flight measurement upgrades
+    done = []
+
+    def miss():
+        cache.get((8, 8, 12))  # pre-fix: spins forever in eviction
+        done.append(True)
+
+    t = threading.Thread(target=miss, daemon=True)
+    t.start()
+    t.join(timeout=30.0)
+    assert done, "plan-cache eviction livelocked with all plans upgrading"
+    assert len(cache) == 3  # over capacity until upgrades land
+    for cp in cache._plans.values():
+        cp.upgrading = False
+    cache.get((8, 8, 16))  # next miss drains the excess
+    assert len(cache) == 2
+
+
 def test_plan_cache_key_separates_problems_and_dtypes():
     cache = PlanCache()
     keys = {cache.key_for((8, 8, 8), np.complex64, "c2c"),
@@ -202,6 +228,31 @@ def test_service_stop_drains_pending():
         svc.submit(_cplx(rng))
 
 
+def test_service_drain_chunks_oversized_buckets():
+    """stop(drain=True) can inherit a same-key bucket larger than
+    max_batch (leftover partial bucket plus late arrivals); it must chunk
+    into max_batch-sized dispatches and serve every request, not fail
+    them with a padded_size error."""
+    import concurrent.futures
+    from repro.serve.service import _Pending
+    rng = np.random.RandomState(4)
+    xs = [_cplx(rng) for _ in range(5)]
+    ref = [np.asarray(Croft3D((N, N, N)).forward(x)) for x in xs]
+    svc = TransformService(max_batch=2, max_wait_ms=5000.0)
+    pendings = []
+    for x in xs:  # straight to the queue, as if racing past the sentinel
+        req = TransformRequest(x=x)
+        req.validate_payload()
+        pendings.append(_Pending(req, concurrent.futures.Future()))
+        svc._queue.put(pendings[-1])
+    svc._drain_all()
+    results = [p.future.result(timeout=60) for p in pendings]
+    assert all(r.ok for r in results), [r.error for r in results]
+    assert all(r.padded_size <= 2 for r in results)
+    for r, want in zip(results, ref):
+        assert np.array_equal(r.value, want)
+
+
 def test_service_rejects_malformed_at_submit():
     with TransformService() as svc:
         with pytest.raises(ValueError, match="rank-3"):
@@ -268,6 +319,24 @@ def test_wisdom_stale_lock_is_broken(tmp_path):
     os.utime(lock, (old, old))  # a writer that died a minute ago
     with wisdom_lib._FileLock(lock, timeout=1.0, stale_s=30.0):
         pass  # acquired by breaking the stale lock, not by timeout
+
+
+def test_wisdom_fresh_lock_survives_break_attempt(tmp_path):
+    """_break_stale must not unlink a live writer's fresh lock (the
+    two-waiters-both-observe-stale race): a fresh lock is restored, a
+    genuinely stale one is removed."""
+    lock = str(tmp_path / "w.json.lock")
+    fl = wisdom_lib._FileLock(lock, timeout=1.0, stale_s=30.0)
+    with open(lock, "w") as f:
+        f.write("123")  # a live holder's fresh lock
+    fl._break_stale()
+    assert os.path.exists(lock), "fresh lock was stolen"
+    old = time.time() - 60.0
+    os.utime(lock, (old, old))  # now it really is a dead writer's
+    fl._break_stale()
+    assert not os.path.exists(lock)
+    assert not any(p.name.startswith("w.json.lock.stale")
+                   for p in tmp_path.iterdir())  # no litter
 
 
 def test_wisdom_stats_cli(tmp_path, capsys):
