@@ -7,11 +7,16 @@ artifacts / roofline constants — no TPU in this container).
 ``--smoke`` runs only the fast sweeps — the autotuner
 (``benchmarks.tuning_bench``), the real-transform packed-vs-embed
 comparison (``benchmarks.rfft_bench``), the transpose overlap-engine
-sweep (``benchmarks.overlap_bench``), and the transform-service load
-sweep (``benchmarks.serve_bench``) — the CI path exercising the planner,
-the r2c pipeline, all three transpose impls, and the serving layer
-(including its deterministic batched-collective gate) end to end on
-every push.
+sweep (``benchmarks.overlap_bench``), the transform-service load
+sweep (``benchmarks.serve_bench``), and the collective-op profile with
+its alpha/beta calibration fit (``benchmarks.collective_profile``) —
+the CI path exercising the planner, the r2c pipeline, all three
+transpose impls, and the serving layer (including its deterministic
+batched-collective gate) end to end on every push.
+
+``--trace DIR`` has the overlap and serve sweeps save Chrome-trace JSON
+(``DIR/overlap_trace.json`` / ``DIR/serve_trace.json``) alongside their
+``BENCH_*.json`` phase breakdowns.
 """
 
 import argparse
@@ -22,24 +27,39 @@ FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.kernel_micro", "benchmarks.lm_roofline",
                 "benchmarks.train_bench", "benchmarks.tuning_bench",
                 "benchmarks.rfft_bench", "benchmarks.overlap_bench",
-                "benchmarks.serve_bench"]
+                "benchmarks.serve_bench", "benchmarks.trace_smoke"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast tuner-only sweep (CI)")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="save Chrome-trace JSON from the overlap/serve "
+                         "sweeps into DIR")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failures = []
     if args.smoke:
-        from benchmarks import (overlap_bench, rfft_bench, serve_bench,
+        import os
+
+        from benchmarks import (collective_profile, overlap_bench,
+                                rfft_bench, serve_bench, trace_smoke,
                                 tuning_bench)
+        tdir = args.trace
+        if tdir:
+            os.makedirs(tdir, exist_ok=True)
         tuning_bench.run(smoke=True)
         rfft_bench.run(smoke=True)
-        overlap_bench.run(smoke=True)
-        serve_bench.run(smoke=True)
+        overlap_bench.run(
+            smoke=True,
+            trace=os.path.join(tdir, "overlap_trace.json") if tdir else None)
+        serve_bench.run(
+            smoke=True,
+            trace=os.path.join(tdir, "serve_trace.json") if tdir else None)
+        collective_profile.run(smoke=True)
+        trace_smoke.run(smoke=True)
         return
     for modname in FULL_MODULES:
         try:

@@ -23,6 +23,14 @@ schedules 8 device threads on ~2 cores (the PR 5 caveat), so absolute
 latencies track host load, not the code.  The gate is part 1.
 
 ``run(smoke=True)`` is the CI path (fewer QPS points, shorter windows).
+
+The service's metrics-registry snapshot (counters, padding waste, batch
+size / latency / queue-wait histograms) is always recorded under
+``metrics`` in ``BENCH_serve.json``.  ``run(trace=...)`` (CLI: ``--trace
+out.json``) additionally enables the ``repro.obs`` tracer for the load
+sweep — request-lifecycle spans (submit -> queue wait -> dispatch ->
+h2d/compute/d2h) plus plan-cache events — records the per-category time
+rollup under ``phase_rollup``, and saves the Chrome trace.
 """
 
 from __future__ import annotations
@@ -43,6 +51,11 @@ from repro.launch import hlo_cost
 from repro.serve import PlanCache, TransformService
 
 SMOKE = {smoke}
+TRACE = {trace!r}
+tracer = None
+if TRACE:
+    from repro import obs
+    tracer = obs.enable()
 mesh = jax.make_mesh((2, 4), ("y", "z"))
 wisdom = os.path.join(tempfile.mkdtemp(), "serve_wisdom.json")
 report = {{"backend": jax.default_backend(),
@@ -168,14 +181,27 @@ report["load"] = {{"duration_s": DURATION, "mix": MIX, "points": points,
 report["service_stats"] = svc.stats()
 svc.stop()
 report["plan_cache"] = cache.snapshot()
+# per-phase breakdown: the registry snapshot is the always-on view
+# (counters + batch/latency/queue-wait histograms with quantiles);
+# plan-cache lifecycle counters live in the cache's own registry here
+# because this bench builds the cache standalone
+report["metrics"] = svc.registry.snapshot()
+report["plan_cache_metrics"] = cache.registry.snapshot()
+if tracer is not None:
+    from repro.obs import report as obs_report
+    report["phase_rollup"] = obs_report.category_rollup(tracer.events())
+    tracer.save(TRACE)
+    print("TRACE_WRITTEN " + TRACE)
 print("SERVE_JSON " + json.dumps(report, default=float))
 """
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, trace: str | None = None) -> dict:
     out = run_subprocess_bench(
-        _BENCH_CODE.format(smoke=repr(bool(smoke))), n_devices=8,
-        timeout=1800)
+        _BENCH_CODE.format(smoke=repr(bool(smoke)), trace=trace),
+        n_devices=8, timeout=1800)
+    if trace and "TRACE_WRITTEN" not in out:
+        raise RuntimeError("serve bench did not write the trace JSON")
     line = next(ln for ln in out.splitlines()
                 if ln.startswith("SERVE_JSON "))
     report = json.loads(line[len("SERVE_JSON "):])
@@ -208,5 +234,11 @@ def run(smoke: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    import sys
-    run(smoke="--smoke" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="enable the obs tracer for the load sweep and "
+                         "save the Chrome trace here")
+    args = ap.parse_args()
+    run(smoke=args.smoke, trace=args.trace)

@@ -618,6 +618,41 @@ def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
     return _pairwise_transpose(blk, axis, split_axis, concat_axis)
 
 
+def stage_pre(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
+              ctx=None) -> jax.Array:
+    """The compute leg of one stage: prologue ops -> local FFT ->
+    epilogue ops, on one (chunk of a) local block.  Module-level so the
+    tracer's per-stage attribution (``repro.obs.instrument``) can build
+    a compute-only executable from the exact emission ``run_stage``
+    uses."""
+    ctx = ctx or {}
+    for op in st.prologue:
+        blk = op.apply(blk, opts, ctx, off)
+    if st.fft_axis is not None:
+        blk = _fft_along(blk, st.fft_axis + off, sign, opts, st.impl_stage)
+    for op in st.epilogue:
+        blk = op.apply(blk, opts, ctx, off)
+    return blk
+
+
+def stage_comm(blk: jax.Array, st: Stage, opts, off: int = 0) -> jax.Array:
+    """The collective leg of one stage (the global transpose); the
+    counterpart of :func:`stage_pre`."""
+    return _all_to_all(blk, st.comm_axis, st.split_axis + off,
+                       st.concat_axis + off, opts.transpose_impl)
+
+
+def stage_category(st: Stage) -> str:
+    """The dominant tracer category of a stage (``repro.obs.CATEGORIES``)."""
+    if st.fft_axis is not None:
+        return "fft"
+    if st.comm_axis is not None:
+        return "collective"
+    if st.prologue:
+        return "pack"
+    return "unpack" if st.epilogue else "epilogue"
+
+
 def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
               ctx=None) -> jax.Array:
     """Execute one stage on a local block (axis indices offset by ``off``
@@ -638,17 +673,10 @@ def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
     ctx = ctx or {}
 
     def pre(c):
-        for op in st.prologue:
-            c = op.apply(c, opts, ctx, off)
-        if st.fft_axis is not None:
-            c = _fft_along(c, st.fft_axis + off, sign, opts, st.impl_stage)
-        for op in st.epilogue:
-            c = op.apply(c, opts, ctx, off)
-        return c
+        return stage_pre(c, st, sign, opts, off, ctx)
 
     def comm(c):
-        return _all_to_all(c, st.comm_axis, st.split_axis + off,
-                           st.concat_axis + off, opts.transpose_impl)
+        return stage_comm(c, st, opts, off)
 
     if st.comm_axis is None:
         return pre(blk)  # nothing to overlap with: never chunked

@@ -1,0 +1,47 @@
+"""repro.obs — stage-level tracing, metrics, and overlap attribution.
+
+Three pieces (ISSUE 7):
+
+  * :mod:`repro.obs.tracer` — thread-safe span tracer with Chrome-trace
+    JSON export (``chrome://tracing`` / Perfetto) and an in-process ring
+    buffer; a no-op tracer is the process default so instrumentation is
+    zero-cost until :func:`enable` / :func:`tracing` installs a real one.
+  * :mod:`repro.obs.metrics` — named counters, gauges, and log-bucketed
+    histograms with quantile estimation; JSON snapshots and Prometheus
+    text exposition.
+  * :mod:`repro.obs.instrument` / :mod:`repro.obs.report` — re-drive a
+    plan's schedule stage by stage with host-side timing shims, attach
+    HLO cost attribution, and join measured per-stage timings against
+    the analytic cost model (``python -m repro.obs.report trace.json``)
+    to produce the overlap-efficiency table the paper's 42–51% hiding
+    claim is about.
+"""
+
+from repro.obs.tracer import (  # noqa: F401
+    CATEGORIES,
+    NOOP,
+    NoopTracer,
+    Tracer,
+    current_tags,
+    disable,
+    enable,
+    get_tracer,
+    set_tracer,
+    tag_scope,
+    tracing,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    set_registry,
+)
+
+__all__ = [
+    "CATEGORIES", "NOOP", "NoopTracer", "Tracer", "current_tags",
+    "disable", "enable", "get_tracer", "set_tracer", "tag_scope",
+    "tracing", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "set_registry",
+]

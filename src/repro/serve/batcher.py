@@ -56,6 +56,9 @@ class Bucket:
     key: str
     requests: list = dataclasses.field(default_factory=list)
     t_oldest: float = 0.0
+    #: why this bucket dispatched: "full" | "deadline" | "drain"
+    #: (set by the pop that releases it; span/metric attribution)
+    reason: str = ""
 
     def add(self, req: TransformRequest, now: float) -> None:
         if not self.requests:
@@ -90,9 +93,14 @@ class Batcher:
         """Buckets due for dispatch: full, or oldest request past the
         wait budget.  Popped buckets leave the pending set."""
         now = time.monotonic() if now is None else now
-        ready = [b for b in self._buckets.values()
-                 if len(b) >= self.max_batch
-                 or (now - b.t_oldest) >= self.max_wait_s]
+        ready = []
+        for b in self._buckets.values():
+            if len(b) >= self.max_batch:
+                b.reason = "full"
+                ready.append(b)
+            elif (now - b.t_oldest) >= self.max_wait_s:
+                b.reason = "deadline"
+                ready.append(b)
         for b in ready:
             del self._buckets[b.key]
         return ready
@@ -100,6 +108,8 @@ class Batcher:
     def pop_all(self) -> list[Bucket]:
         """Drain every pending bucket (shutdown path)."""
         out = list(self._buckets.values())
+        for b in out:
+            b.reason = "drain"
         self._buckets.clear()
         return out
 

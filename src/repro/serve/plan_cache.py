@@ -29,6 +29,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import tracer as tracer_lib
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -74,7 +77,8 @@ class PlanCache:
                  wisdom_path: Optional[str] = None,
                  measure_after: Optional[int] = None,
                  upgrade_async: bool = True,
-                 tune_kw: Optional[dict] = None):
+                 tune_kw: Optional[dict] = None,
+                 registry: Optional[metrics_lib.MetricsRegistry] = None):
         if max_plans < 1:
             raise ValueError("max_plans must be >= 1")
         self.mesh = mesh
@@ -84,6 +88,11 @@ class PlanCache:
         self.upgrade_async = upgrade_async
         self.tune_kw = dict(tune_kw or {})
         self.stats = CacheStats()
+        # lifecycle counters mirror CacheStats into the metrics registry
+        # (the service passes its own registry in; standalone caches get
+        # a private one so two caches never mix counts)
+        self.registry = registry if registry is not None \
+            else metrics_lib.MetricsRegistry()
         self._plans: dict[str, CachedPlan] = {}
         self._clock = 0
         self._lock = threading.RLock()
@@ -109,11 +118,18 @@ class PlanCache:
             cp = self._plans.get(key)
             if cp is not None:
                 self.stats.hits += 1
+                self.registry.counter("plan_cache_hits").inc()
+                tracer_lib.get_tracer().instant(
+                    "plan:hit", "plan", {"key": key, "state": cp.state})
                 self._touch(cp)
                 self._maybe_upgrade(cp)
                 return cp
             self.stats.misses += 1
-            cp = self._build(key, tuple(shape), jnp.dtype(dtype), problem)
+            self.registry.counter("plan_cache_misses").inc()
+            with tracer_lib.get_tracer().span("plan:build", "plan",
+                                              key=key):
+                cp = self._build(key, tuple(shape), jnp.dtype(dtype),
+                                 problem)
             self._plans[key] = cp
             self._touch(cp)
             # _evict_lru returns False when every other plan is mid-upgrade
@@ -154,6 +170,9 @@ class PlanCache:
         victim = min(victims, key=lambda cp: cp.last_used)
         del self._plans[victim.key]
         self.stats.evictions += 1
+        self.registry.counter("plan_cache_evictions").inc()
+        tracer_lib.get_tracer().instant(
+            "plan:evict", "plan", {"key": victim.key, "hits": victim.hits})
         victim.plan.release()  # compile-cache hygiene
         return True
 
@@ -164,6 +183,9 @@ class PlanCache:
                 or cp.hits < self.measure_after):
             return
         cp.upgrading = True
+        self.registry.counter("plan_cache_upgrade_starts").inc()
+        tracer_lib.get_tracer().instant(
+            "plan:upgrade-start", "plan", {"key": cp.key, "hits": cp.hits})
         if self.upgrade_async:
             t = threading.Thread(target=self._upgrade, args=(cp,),
                                  daemon=True, name=f"plan-upgrade-{cp.key}")
@@ -182,27 +204,34 @@ class PlanCache:
         object; the swap is a reference replacement, not a mutation.
         """
         from repro.core.api import Croft3D
+        tracer = tracer_lib.get_tracer()
         try:
-            from repro import tuning
-            result = tuning.upgrade_wisdom(
-                cp.plan.shape, self.mesh, dtype=cp.plan.dtype,
-                problem=cp.plan.problem, wisdom_path=self.wisdom_path,
-                **self.tune_kw)
-            plan = Croft3D(cp.plan.shape, self.mesh, result.decomp,
-                           result.opts, dtype=cp.plan.dtype,
-                           problem=cp.plan.problem, strategy=result.strategy)
-            plan.tune_result = result
+            with tracer.span("plan:upgrade", "plan", key=cp.key):
+                from repro import tuning
+                result = tuning.upgrade_wisdom(
+                    cp.plan.shape, self.mesh, dtype=cp.plan.dtype,
+                    problem=cp.plan.problem, wisdom_path=self.wisdom_path,
+                    **self.tune_kw)
+                plan = Croft3D(cp.plan.shape, self.mesh, result.decomp,
+                               result.opts, dtype=cp.plan.dtype,
+                               problem=cp.plan.problem,
+                               strategy=result.strategy)
+                plan.tune_result = result
             with self._lock:
                 old = self._plans.get(cp.key)
                 new = CachedPlan(plan=plan, key=cp.key, state="warm",
                                  hits=cp.hits, last_used=cp.last_used)
                 self._plans[cp.key] = new
                 self.stats.upgrades += 1
+                self.registry.counter("plan_cache_upgrades").inc()
                 if old is not None and old.plan is not plan:
                     old.plan.release()
+            tracer.instant("plan:upgrade-win", "plan",
+                           {"key": cp.key, "plan": result.summary()})
         except Exception:
             # an upgrade failure must never take the service down; the
             # cold plan keeps serving and the next hit may retry
+            tracer.instant("plan:upgrade-fail", "plan", {"key": cp.key})
             with self._lock:
                 cp.upgrading = False
 

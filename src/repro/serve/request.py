@@ -147,3 +147,9 @@ class TransformResult:
     #: plan provenance: "hit" | "cold" | "warm" (see serve.plan_cache)
     plan_state: str = "hit"
     plan_key: str = ""
+    #: lifecycle timestamps on the ``time.monotonic()`` clock (the same
+    #: clock spans use): submit -> dispatch (batch formed, device work
+    #: starts) -> done (result on host).  0.0 on failure paths.
+    t_submit: float = 0.0
+    t_dispatch: float = 0.0
+    t_done: float = 0.0

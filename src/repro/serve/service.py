@@ -19,7 +19,6 @@ instead of being fixed at a static batch size.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import queue
 import threading
@@ -29,6 +28,8 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import tracer as tracer_lib
 from repro.serve.batcher import Batcher, Bucket, padded_size, stack_and_pad
 from repro.serve.plan_cache import PlanCache
 from repro.serve.request import (TransformRequest, TransformResult,
@@ -51,28 +52,50 @@ class TransformService:
                  max_plans: int = 16,
                  measure_after: Optional[int] = None,
                  tune_kw: Optional[dict] = None,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 registry: Optional[metrics_lib.MetricsRegistry] = None):
         self.mesh = mesh
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
+        # every serving number lives in the metrics registry (repro.obs);
+        # stats() below is a thin compatibility view over it.  Each
+        # service owns its registry by default so two services never mix
+        # counters; pass registry= to share one exposition endpoint.
+        self.registry = registry if registry is not None \
+            else metrics_lib.MetricsRegistry()
         self.cache = cache if cache is not None else PlanCache(
             mesh, wisdom_path=wisdom_path, max_plans=max_plans,
-            measure_after=measure_after, tune_kw=tune_kw)
+            measure_after=measure_after, tune_kw=tune_kw,
+            registry=self.registry)
         self._queue: "queue.Queue" = queue.Queue()
         self._batcher = Batcher(max_batch, self.max_wait_s)
         self._worker: Optional[threading.Thread] = None
         self._running = False
         self._lock = threading.Lock()
-        # aggregate stats: worker-thread writes and caller-thread stats()
-        # reads share _stats_lock (iterating the deque/hist while the
-        # worker appends would raise "mutated during iteration")
-        self._stats_lock = threading.Lock()
-        self._n_requests = 0
-        self._n_batches = 0
-        self._real_rows = 0
-        self._padded_rows = 0
-        self._batch_hist: dict[int, int] = {}
-        self._latencies = collections.deque(maxlen=latency_window)
+        del latency_window  # kept for API compat; quantiles now come
+        #                     from the registry's log-bucketed histogram
+        self._m_submitted = self.registry.counter(
+            "serve_requests_submitted", "requests accepted by submit()")
+        self._m_requests = self.registry.counter(
+            "serve_requests", "requests served successfully")
+        self._m_batches = self.registry.counter(
+            "serve_batches", "batched dispatches")
+        self._m_real_rows = self.registry.counter(
+            "serve_real_rows", "real rows across dispatched batches")
+        self._m_padded_rows = self.registry.counter(
+            "serve_padded_rows", "padded rows across dispatched batches")
+        self._m_waste_rows = self.registry.counter(
+            "serve_padding_waste_rows",
+            "padded slots that carried no request (dead collective weight)")
+        self._m_failures = self.registry.counter(
+            "serve_failures", "requests resolved with ok=False")
+        self._m_batch_hist = self.registry.histogram(
+            "serve_batch_size", "real batch size per dispatch",
+            bounds=range(1, max_batch + 1))
+        self._m_latency = self.registry.histogram(
+            "serve_latency_s", "submit-to-result seconds")
+        self._m_queue_wait = self.registry.histogram(
+            "serve_queue_wait_s", "submit-to-dispatch seconds")
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "TransformService":
@@ -132,6 +155,11 @@ class TransformService:
                 raise RuntimeError("service not started (use `with "
                                    "service:` or service.start())")
             self._queue.put(_Pending(req, fut))
+        self._m_submitted.inc()
+        tracer_lib.get_tracer().instant(
+            "request:submit", "queue",
+            {"req_id": req.req_id, "problem": req.problem,
+             "direction": req.direction})
         return fut
 
     def transform(self, x, **kw) -> np.ndarray:
@@ -198,27 +226,42 @@ class TransformService:
     def _dispatch(self, bucket) -> None:
         pendings = bucket.requests
         req0 = pendings[0].req
+        tracer = tracer_lib.get_tracer()
+        t_dispatch = time.monotonic()
+        n = len(pendings)
+        # retroactive queue-wait spans: started on the client thread at
+        # submit (req.t_submit is on the same monotonic clock), ended now
+        for p in pendings:
+            tracer.complete("request:queue", "queue", p.req.t_submit,
+                            t_dispatch, {"req_id": p.req.req_id,
+                                         "reason": bucket.reason})
+            self._m_queue_wait.observe(t_dispatch - p.req.t_submit)
         try:
-            cp = self.cache.get(req0.shape, req0.dtype, req0.plan_problem)
-            out = self._execute(cp.plan, pendings)
+            with tracer.span("batch:dispatch", "queue", n=n,
+                             reason=bucket.reason, bucket=bucket.key):
+                cp = self.cache.get(req0.shape, req0.dtype,
+                                    req0.plan_problem)
+                out = self._execute(cp.plan, pendings)
             t_done = time.monotonic()
-            n, padded = len(pendings), out.shape[0]
+            padded = out.shape[0]
             for i, p in enumerate(pendings):
                 p.future.set_result(TransformResult(
                     req_id=p.req.req_id, value=out[i],
                     latency_s=t_done - p.req.t_submit, batch_size=n,
                     padded_size=padded, plan_state=cp.state,
-                    plan_key=cp.key))
-            with self._stats_lock:
-                self._n_requests += n
-                self._n_batches += 1
-                self._real_rows += n
-                self._padded_rows += padded
-                self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
-                for p in pendings:
-                    self._latencies.append(t_done - p.req.t_submit)
+                    plan_key=cp.key, t_submit=p.req.t_submit,
+                    t_dispatch=t_dispatch, t_done=t_done))
+            self._m_requests.inc(n)
+            self._m_batches.inc()
+            self._m_real_rows.inc(n)
+            self._m_padded_rows.inc(padded)
+            self._m_waste_rows.inc(padded - n)
+            self._m_batch_hist.observe(n)
+            for p in pendings:
+                self._m_latency.observe(t_done - p.req.t_submit)
         except Exception as e:  # resolve futures, never kill the worker
             msg = f"{type(e).__name__}: {e}"
+            self._m_failures.inc(n)
             for p in pendings:
                 if not p.future.done():
                     p.future.set_result(TransformResult(
@@ -226,26 +269,41 @@ class TransformService:
                         error=msg))
 
     def _execute(self, plan, pendings) -> np.ndarray:
-        """Stack, pad, place, run the batched executable, fetch to host."""
+        """Stack, pad, place, run the batched executable, fetch to host.
+
+        Phase spans (h2d -> compute -> d2h) are emitted when tracing is
+        enabled; the compute span then pays one extra
+        ``block_until_ready`` so the d2h span measures only the fetch.
+        With the no-op tracer the call sequence is byte-identical to the
+        untraced path."""
         req0 = pendings[0].req
+        tracer = tracer_lib.get_tracer()
         n = len(pendings)
         padded = padded_size(n, self.max_batch)
         forward = req0.direction == "forward"
         in_dtype = (plan.input_dtype if forward else plan.dtype)
-        xs = stack_and_pad([p.req.x for p in pendings],
-                           padded).astype(in_dtype, copy=False)
-        xd = self._place(xs, plan.batched_sharding(
-            "input" if forward else "output"))
-        if req0.h is not None:
-            hs = stack_and_pad([p.req.h for p in pendings],
-                               padded).astype(plan.dtype, copy=False)
-            hd = self._place(hs, plan.batched_sharding("output"))
-            out = plan.forward_filtered_batched(xd, hd)
-        elif forward:
-            out = plan.forward_batched(xd)
-        else:
-            out = plan.inverse_batched(xd)
-        return np.asarray(jax.device_get(out))
+        with tracer.span("batch:h2d", "h2d/d2h", rows=padded):
+            xs = stack_and_pad([p.req.x for p in pendings],
+                               padded).astype(in_dtype, copy=False)
+            xd = self._place(xs, plan.batched_sharding(
+                "input" if forward else "output"))
+            hd = None
+            if req0.h is not None:
+                hs = stack_and_pad([p.req.h for p in pendings],
+                                   padded).astype(plan.dtype, copy=False)
+                hd = self._place(hs, plan.batched_sharding("output"))
+        with tracer.span("batch:compute", "fft", rows=padded,
+                         direction=req0.direction, problem=req0.problem):
+            if hd is not None:
+                out = plan.forward_filtered_batched(xd, hd)
+            elif forward:
+                out = plan.forward_batched(xd)
+            else:
+                out = plan.inverse_batched(xd)
+            if tracer.enabled:
+                jax.block_until_ready(out)
+        with tracer.span("batch:d2h", "h2d/d2h", rows=padded):
+            return np.asarray(jax.device_get(out))
 
     @staticmethod
     def _place(host: np.ndarray, sharding):
@@ -255,20 +313,27 @@ class TransformService:
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict:
-        """Serving counters: occupancy, batch histogram, latency
-        quantiles over the recent window, plan-cache stats."""
-        with self._stats_lock:
-            lats = sorted(self._latencies)
-            n_requests = self._n_requests
-            n_batches = self._n_batches
-            real_rows = self._real_rows
-            padded_rows = self._padded_rows
-            batch_hist = dict(self._batch_hist)
+        """Compatibility view over the metrics registry: the dict shape
+        predates ``repro.obs`` and is kept for callers/benches; new code
+        should read ``service.registry`` directly (``snapshot()`` /
+        ``to_prometheus()``)."""
+        n_requests = int(self._m_requests.value)
+        n_batches = int(self._m_batches.value)
+        real_rows = int(self._m_real_rows.value)
+        padded_rows = int(self._m_padded_rows.value)
+
+        # exact batch-size histogram back out of the explicit-bounds
+        # buckets (cumulative -> per-size counts keyed by int size)
+        batch_hist = {}
+        prev = 0
+        for edge, cum in self._m_batch_hist.buckets()[:-1]:
+            if cum > prev:
+                batch_hist[int(edge)] = cum - prev
+            prev = cum
 
         def q(p):
-            if not lats:
-                return None
-            return lats[min(len(lats) - 1, int(p * len(lats)))] * 1e3
+            v = self._m_latency.quantile(p)
+            return None if v is None else v * 1e3
 
         return {
             "requests": n_requests,
@@ -276,8 +341,9 @@ class TransformService:
             "mean_batch": (n_requests / n_batches if n_batches else 0.0),
             "real_rows": real_rows,
             "padded_rows": padded_rows,
+            "padding_waste_rows": int(self._m_waste_rows.value),
             "occupancy": (real_rows / padded_rows if padded_rows else 0.0),
-            "batch_hist": dict(sorted(batch_hist.items())),
+            "batch_hist": batch_hist,
             "pending": self._batcher.pending + self._queue.qsize(),
             "latency_ms": {"p50": q(0.50), "p90": q(0.90), "p99": q(0.99)},
             "plan_cache": self.cache.snapshot(),

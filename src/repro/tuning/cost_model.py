@@ -214,6 +214,88 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
         transpose_overhead_s=transpose_overhead_s)
 
 
+def per_stage_costs(shape: Sequence[int], cand: Candidate,
+                    axis_sizes: Mapping[str, int],
+                    dtype=jnp.complex64, batch: int = 1) -> list:
+    """Modeled per-stage compute/collective split — what the traced
+    per-stage timings (``repro.obs.instrument``) are joined against.
+
+    One row per schedule stage (plus one per out-of-body reshard), using
+    the same conventions as :func:`analytic_cost`: FFT flops at the
+    layout-reported block size over ``PEAK_FLOPS * IMPL_EFFICIENCY``,
+    the ``LOCAL_PASSES`` HBM budget spread evenly across the stages that
+    do local work, ring pack/unpack passes charged to the compute leg,
+    and the §5.1 overlap rule (0.9 of the smaller leg hides under the
+    larger when the stage pipelines: any chunkable stage with effective
+    K >= 2, or the ring's independent rounds even at K=1; the pairwise
+    serial chain never overlaps).  ``predicted_efficiency`` is the
+    modeled fraction of the stage's collective time hidden under
+    compute — the per-stage form of the paper's 42-51% claim.
+    """
+    opts = cand.opts
+    itemsize = jnp.dtype(dtype).itemsize
+    sched = schedule_for(shape, cand)
+    impl = opts.transpose_impl
+    eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
+
+    from repro.core.schedule import _flat, stage_category
+    n_local = sum(1 for st in sched.stages
+                  if st.fft_axis is not None or st.prologue or st.epilogue)
+    mem_passes = LOCAL_PASSES / max(1, n_local)
+
+    rows = []
+    for i, (st, pts) in enumerate(zip(sched.stages, sched.points)):
+        compute_s = 0.0
+        if st.fft_axis is not None:
+            loc = pts.fft.local_shape(shape, axis_sizes)
+            f = 5.0 * math.prod(loc) * math.log2(loc[st.fft_axis])
+            eff = IMPL_EFFICIENCY.get(opts.stage_impl(st.impl_stage),
+                                      _DEFAULT_EFFICIENCY)
+            compute_s += f / (PEAK_FLOPS * eff)
+        if st.fft_axis is not None or st.prologue or st.epilogue:
+            compute_s += (mem_passes
+                          * pts.entry.bytes(shape, axis_sizes, itemsize)
+                          / HBM_BW)
+        compute_s *= batch
+
+        collective_s = 0.0
+        k_eff = 1
+        overlaps = False
+        if st.comm_axis is not None:
+            ev_bytes = pts.comm.bytes(shape, axis_sizes, itemsize) * batch
+            collective_s = ev_bytes / LINK_BW
+            k_eff = next(eff_ks)
+            overlaps = impl != "pairwise" and (k_eff >= 2 or impl == "ring")
+            if impl == "ring":
+                compute_s += 2 * ev_bytes / HBM_BW
+            elif impl == "pairwise":
+                csize = math.prod(axis_sizes[n] for n in _flat(st.comm_axis))
+                compute_s += (csize - 1) * ev_bytes / HBM_BW
+
+        hidden = 0.9 * min(compute_s, collective_s) if overlaps else 0.0
+        rows.append({
+            "stage": i,
+            "name": st.name,
+            "category": stage_category(st),
+            "compute_s": compute_s,
+            "collective_s": collective_s,
+            "k_eff": k_eff,
+            "overlaps": overlaps,
+            "hidden_s": hidden,
+            "predicted_efficiency": (hidden / collective_s
+                                     if collective_s else None),
+        })
+    for ec in sched.extra_comms:
+        coll = ec.layout.bytes(shape, axis_sizes, itemsize) * batch / LINK_BW
+        rows.append({
+            "stage": None, "name": ec.name, "category": "collective",
+            "compute_s": 0.0, "collective_s": coll, "k_eff": 1,
+            "overlaps": False, "hidden_s": 0.0,
+            "predicted_efficiency": 0.0 if coll else None,
+        })
+    return rows
+
+
 def rank_candidates(shape: Sequence[int], cands: Sequence[Candidate],
                     axis_sizes: Mapping[str, int],
                     dtype=jnp.complex64,

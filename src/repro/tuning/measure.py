@@ -14,6 +14,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import tracer as tracer_lib
 from repro.tuning.candidates import Candidate
 
 
@@ -76,10 +78,22 @@ def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
     fails to build/compile (it is then dropped from the race rather than
     failing the whole tune)."""
     from repro.core.api import Croft3D
-    try:
-        plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
-                       dtype=jnp.dtype(dtype), problem=cand.problem,
-                       strategy=cand.strategy)
-        return time_forward(plan, warmup=warmup, iters=iters, batch=batch)
-    except Exception:
-        return None
+    # tag_scope marks every span/transform emitted while timing as tuner
+    # traffic, so a shared trace never confuses measurement runs with
+    # serving traffic (the two interleave when the plan cache's
+    # background upgrade thread measures while the worker serves)
+    with tracer_lib.tag_scope(traffic="tuning"):
+        with tracer_lib.get_tracer().span("measure:candidate", "plan",
+                                          plan=cand.label, batch=batch):
+            try:
+                plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
+                               dtype=jnp.dtype(dtype), problem=cand.problem,
+                               strategy=cand.strategy)
+                t = time_forward(plan, warmup=warmup, iters=iters,
+                                 batch=batch)
+            except Exception:
+                metrics_lib.get_registry().counter(
+                    "tune_measure_failures").inc()
+                return None
+    metrics_lib.get_registry().counter("tune_measure_runs").inc()
+    return t

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.core.decomposition import Decomposition
 from repro.core.distributed import FFTOptions
+from repro.obs import metrics as metrics_lib
+from repro.obs import tracer as tracer_lib
 from repro.tuning import candidates as cand_lib
 from repro.tuning import cost_model, measure, wisdom as wisdom_lib
 
@@ -130,7 +132,10 @@ def tune(shape: Sequence[int], mesh=None, *,
         raise ValueError(
             f"no valid decomposition for shape={tuple(shape)} over mesh "
             f"axes {dict(sizes)} — check divisibility")
-    scored = cost_model.rank_candidates(shape, cands, sizes, dtype, batch)
+    with tracer_lib.get_tracer().span("tune:rank", "plan", key=key,
+                                      n_candidates=len(cands)):
+        scored = cost_model.rank_candidates(shape, cands, sizes, dtype,
+                                            batch)
     ranked = [{"label": c.label, "model_s": b.total_s,
                "cost": b.to_dict()} for c, b in scored]
 
@@ -149,12 +154,16 @@ def tune(shape: Sequence[int], mesh=None, *,
             pool.append(default)
         model_by_cand = {c: b.total_s for c, b in scored}
         raced = []
-        for c in pool:
-            t = measure.measure_candidate(
-                shape, mesh, c, dtype, warmup=measure_warmup,
-                iters=measure_iters, batch=batch)
-            if t is not None:
-                raced.append((c, t))
+        with tracer_lib.get_tracer().span("tune:measure", "plan", key=key,
+                                          n_pool=len(pool)):
+            for c in pool:
+                t = measure.measure_candidate(
+                    shape, mesh, c, dtype, warmup=measure_warmup,
+                    iters=measure_iters, batch=batch)
+                if t is not None:
+                    raced.append((c, t))
+        metrics_lib.get_registry().counter(
+            "tune_measured_candidates").inc(len(raced))
         if not raced:
             raise RuntimeError("every measured candidate failed to compile")
         raced.sort(key=lambda ct: ct[1])
