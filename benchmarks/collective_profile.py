@@ -14,6 +14,12 @@ through the ``repro.obs`` metrics registry (gauges
 ``collective_alpha_s`` / ``collective_beta_s_per_byte``) so cost-model
 calibration and tracing share one output path; the CSV rows below read
 them back out of the registry.
+
+The fit is also persisted to a calibration JSON (``$CROFT_CALIBRATION``
+when set, else ``calibration.json`` in the working directory) so *later*
+processes can tune with measured constants:
+``repro.tuning.cost_model.collective_constants`` loads the file via the
+same env var, after checking the in-process registry.
 """
 
 from __future__ import annotations
@@ -88,3 +94,16 @@ def run(smoke: bool = False):
          reg.gauge("collective_alpha_s").value * 1e6, True)
     emit("fig12-15/fit/beta-us-per-MiB",
          reg.gauge("collective_beta_s_per_byte").value * 1e6 * 2 ** 20, True)
+
+    # persist the fit so other processes (CI tuning runs, training jobs)
+    # can load it through $CROFT_CALIBRATION — the registry above only
+    # calibrates *this* process
+    import os
+
+    from repro.tuning.cost_model import CALIBRATION_ENV
+    path = os.environ.get(CALIBRATION_ENV) or "calibration.json"
+    with open(path, "w") as f:
+        json.dump({"collective_alpha_s": float(alpha),
+                   "collective_beta_s_per_byte": float(beta),
+                   "fit_points": len(TAGS)}, f, indent=2)
+    emit("fig12-15/fit/saved", 1, True)

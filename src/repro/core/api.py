@@ -55,6 +55,11 @@ class Croft3D:
     #: autotune mode ("wisdom" | "model" | "measure"); when set, the
     #: planner overrides ``decomp``/``opts`` (see ``repro.tuning``)
     tune: Optional[str] = None
+    #: tune for a *training step*: the planner prices forward + adjoint
+    #: schedule (problem axis "c2c_grad"/"r2c_grad") instead of forward
+    #: only.  Transforms themselves are identical — gradients work on
+    #: every plan (repro.grad); this only changes which plan wins.
+    grad: bool = False
     wisdom_path: Optional[str] = None
     #: extra keyword arguments for ``tuning.tune`` (top_k, measure_iters, ...)
     tune_kw: Optional[dict] = None
@@ -62,14 +67,19 @@ class Croft3D:
 
     def __post_init__(self):
         if self.problem not in ("c2c", "r2c"):
-            raise ValueError(f"problem must be 'c2c' or 'r2c', got {self.problem!r}")
+            hint = ("; grad-aware tuning is selected with grad=True "
+                    "(Croft3D.tuned(..., grad=True)), not a problem suffix"
+                    if str(self.problem).endswith("_grad") else "")
+            raise ValueError(f"problem must be 'c2c' or 'r2c', got "
+                             f"{self.problem!r}{hint}")
         if self.tune is not None and self.mesh is None:
             raise ValueError("tune= needs a mesh (single-device plans have "
                              "nothing to tune)")
         if self.tune is not None:
             from repro import tuning
+            tune_problem = self.problem + ("_grad" if self.grad else "")
             result = tuning.tune(self.shape, self.mesh, mode=self.tune,
-                                 dtype=self.dtype, problem=self.problem,
+                                 dtype=self.dtype, problem=tune_problem,
                                  wisdom_path=self.wisdom_path,
                                  **(self.tune_kw or {}))
             self.decomp, self.opts = result.decomp, result.opts
@@ -154,23 +164,31 @@ class Croft3D:
 
     _fwd_filtered = None
 
-    def _filtered_fn(self):
+    def _filtered_fn(self, fold: bool = False):
         """The jitted (x, h) -> filtered-spectrum callable (lazy; shared
         by :meth:`forward_filtered` and the batched dispatch path)."""
         if self._fwd_filtered is None:
+            self._fwd_filtered = {}
+        fn = self._fwd_filtered.get(fold)
+        if fn is None:
             if self.problem == "r2c":
                 from repro.core import rfft
                 strat = self.strategy
-                self._fwd_filtered = jax.jit(lambda v, hh: rfft.rfft3d(
+                fn = jax.jit(lambda v, hh: rfft.rfft3d(
                     v, self.mesh, self.decomp, self.opts, strategy=strat,
-                    kspace_filter=hh))
+                    kspace_filter=hh, fold_filter=fold))
+            elif fold:
+                raise ValueError("fold=True is the packed r2c folded "
+                                 "epilogue; c2c filters are always fused "
+                                 "in-schedule")
             else:
-                self._fwd_filtered = jax.jit(lambda v, hh: distributed.fft3d(
+                fn = jax.jit(lambda v, hh: distributed.fft3d(
                     v, self.mesh, self.decomp, self.opts, kspace_filter=hh))
-        return self._fwd_filtered
+            self._fwd_filtered[fold] = fn
+        return fn
 
     def forward_filtered(self, x: jax.Array, h: jax.Array,
-                         alpha: float = 1.0) -> jax.Array:
+                         alpha: float = 1.0, fold: bool = False) -> jax.Array:
         """``forward`` with the k-space multiply ``alpha * h`` fused in.
 
         The multiply rides as a schedule epilogue (c2c: attached to the
@@ -179,9 +197,16 @@ class Croft3D:
         ``kernels/spectral_scale.py`` path — one jit dispatch and no
         extra HBM round trip over the spectrum.  ``h`` must be shaped
         like ``spectrum_shape`` and placed with ``output_sharding``.
+
+        ``fold=True`` (packed r2c only) moves the multiply *before* the
+        DC/Nyquist unfold, onto the packed half spectrum inside the
+        schedule — one fewer pass over the spectrum, valid for filters
+        with ``h(kz=0) == h(kz=Nyquist)``, that plane real and 2-D-even
+        (e.g. a kz-independent low-pass over (kx, ky), or any filter
+        whose DC and Nyquist kz-planes coincide).
         """
         hh = h if alpha == 1.0 else h * jnp.asarray(alpha, h.dtype)
-        return self._filtered_fn()(x, hh)
+        return self._filtered_fn(fold)(x, hh)
 
     # -- batched dispatch (the serving path) ---------------------------------
     #
@@ -260,7 +285,8 @@ class Croft3D:
         """Drop this plan's compiled executables (compile-cache hygiene:
         the serving plan cache calls this on eviction so shape diversity
         cannot grow XLA's live-executable set without bound)."""
-        fns = [self._fwd, self._inv, self._fwd_filtered]
+        fns = [self._fwd, self._inv]
+        fns += list((self._fwd_filtered or {}).values())
         fns += list((self._batched or {}).values())
         for fn in fns:
             clear = getattr(fn, "clear_cache", None)
@@ -276,7 +302,8 @@ class Croft3D:
     @classmethod
     def tuned(cls, shape, mesh: Mesh, *, mode: str = "model",
               wisdom_path: Optional[str] = None, dtype=jnp.complex64,
-              problem: str = "c2c", batch: int = 1, **tune_kw) -> "Croft3D":
+              problem: str = "c2c", batch: int = 1, grad: bool = False,
+              **tune_kw) -> "Croft3D":
         """Plan via the autotuner (``repro.tuning``) instead of hand-picked
         (decomp, opts).
 
@@ -289,12 +316,17 @@ class Croft3D:
         model scales volume terms by B, ``mode="measure"`` times the
         *vmapped* transform over B stacked fields, and the wisdom key
         gains a ``|b{B}`` dimension (B=1 keeps the legacy key format).
+        ``grad=True`` prices a *training step*: the cost model sums the
+        forward schedule and its adjoint (``repro.grad``), measurement
+        times ``jax.value_and_grad`` of a scalar loss through the
+        transform, and the wisdom key gains a ``|grad`` dimension — the
+        chosen plan is optimal for fwd+bwd, not just inference.
         The chosen plan's provenance is on ``plan.tune_result``.
         """
         if batch != 1:
             tune_kw = dict(tune_kw, batch=batch)
         return cls(tuple(shape), mesh, dtype=jnp.dtype(dtype), tune=mode,
-                   problem=problem, wisdom_path=wisdom_path,
+                   problem=problem, grad=grad, wisdom_path=wisdom_path,
                    tune_kw=tune_kw or None)
 
     # -- AOT artifacts for the dry-run / roofline ----------------------------

@@ -261,31 +261,18 @@ def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
     decomp.validate(x.shape, mesh, opts.overlap_k, opts.transpose_impl)
 
     sched = build_schedule(decomp, opts, sign)
-    if kspace_filter is not None:
-        sched = sched.with_epilogue(schedule_lib.SpectralScale())
-    in_spec = sched.layout_in.partition_spec()
-    out_spec = sched.layout_out.partition_spec()
-
-    # normalization uses *global* sizes; fold the scalar in on local blocks
+    # normalization uses *global* sizes; the vjp plan folds the scalar in
+    # on local blocks (and reuses the same scale for the backward pass)
     scale = _norm_scale(x.shape, sign, norm)
 
-    def finish(out):
-        return out if scale is None else out * jnp.asarray(scale, out.dtype)
-
+    # route through repro.grad so jax.grad runs the adjoint schedule
+    # instead of XLA differentiating the shard_map body; primal ops are
+    # identical to running the schedule directly
+    from repro.grad import vjp as grad_vjp
     if kspace_filter is None:
-        def body1(blk):
-            return finish(schedule_lib.run_schedule(blk, sched, opts))
-        fn = shard_map(body1, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
-        return fn(x)
-
-    def body(blk, h):
-        out = schedule_lib.run_schedule(blk, sched, opts,
-                                        operands={"filter": h})
-        return finish(out)
-
-    fn = shard_map(body, mesh=mesh, in_specs=(in_spec, out_spec),
-                   out_specs=out_spec)
-    return fn(x, kspace_filter.astype(x.dtype))
+        return grad_vjp.linear_plan(mesh, sched, opts, scale).apply(x)
+    plan = grad_vjp.filtered_plan(mesh, sched, opts, scale)
+    return plan(x, kspace_filter.astype(x.dtype))
 
 
 def fft3d(x, mesh=None, decomp=None, opts: Optional[FFTOptions] = None,

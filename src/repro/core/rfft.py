@@ -80,7 +80,8 @@ def _guarded_half_slice(y: jax.Array, nz: int, mesh, decomp, opts) -> jax.Array:
 def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
            opts: Optional[FFTOptions] = None,
            strategy: str = "auto", norm: Optional[str] = None,
-           kspace_filter: Optional[jax.Array] = None) -> jax.Array:
+           kspace_filter: Optional[jax.Array] = None,
+           fold_filter: bool = False) -> jax.Array:
     """Real input (Nx, Ny, Nz) -> complex (Nx, Ny, Nz//2 + 1).
 
     Matches ``jnp.fft.rfftn`` with axes in (x, y, z) order (z contiguous,
@@ -88,7 +89,11 @@ def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
     ``norm``: None/"backward" (unscaled forward) | "ortho" (1/sqrt(N)).
     ``kspace_filter`` (shaped like the half spectrum) fuses a k-space
     multiply into the transform — the packed pipeline applies it right
-    after the DC/Nyquist unfold, inside the same jit.
+    after the DC/Nyquist unfold, inside the same jit.  ``fold_filter``
+    (packed distributed path only) moves the multiply *before* the
+    unfold, onto the packed half spectrum inside the schedule — valid
+    for filters with ``h(kz=0) == h(kz=Nyquist)``, that plane real and
+    2-D-even (see ``repro.real.pipeline.packed_rfft3d``).
     NOTE the packed distributed input layout is the *spectral* layout
     (``decomp.spectral_spec()``: z-pencils / z-slabs), not the c2c
     natural layout.
@@ -98,12 +103,18 @@ def rfft3d(x: jax.Array, mesh=None, decomp: Optional[Decomposition] = None,
     if jnp.iscomplexobj(x):
         raise ValueError("rfft3d expects a real array")
     resolved = real_lib.resolve_strategy(strategy, x.shape, mesh, decomp, opts)
+    if fold_filter and not (resolved == "packed" and _is_multidevice(mesh)
+                            and kspace_filter is not None):
+        raise ValueError("fold_filter=True needs a kspace_filter on the "
+                         "distributed packed path (it folds the multiply "
+                         "into the packed schedule)")
     if resolved == "packed":
         if not _is_multidevice(mesh):
             y = real_lib.local_rfft3d_packed(x, opts, norm=norm)
         else:
             return real_lib.packed_rfft3d(x, mesh, decomp, opts, norm=norm,
-                                          kspace_filter=kspace_filter)
+                                          kspace_filter=kspace_filter,
+                                          fold_filter=fold_filter)
     else:
         nz = x.shape[-1]
         xc = x.astype(jnp.complex64 if x.dtype != jnp.float64

@@ -63,3 +63,62 @@ def distributed_seq_fft(xc: jax.Array, axis_name: str, mesh, batch_spec,
 
     spec = P(batch_spec, axis_name, None)
     return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)(xc)
+
+
+# --------------------------------------------------------------------------
+# Learned spectral filter — the CROFT-side training workload
+# --------------------------------------------------------------------------
+#
+# A two-parameter "spectral layer" over a distributed 3-D field:
+#
+#     y_hat(theta; x) = F( gate . x ) . filter
+#
+# with a learnable real-space gate (full grid) and a learnable k-space
+# filter (half spectrum for r2c plans, full for c2c).  The transform is
+# a planned Croft3D: the k-space multiply fuses as the plan's spectral
+# epilogue (``forward_filtered``) and gradients replay the *adjoint
+# schedule* (``repro.grad``) instead of XLA differentiating through
+# shard_map collectives.  This is the workload ``tuned(grad=True)``
+# plans for and ``benchmarks/train_bench.py`` gates.
+
+
+def spectral_filter_shapes(plan) -> tuple:
+    """(gate shape, filter shape) for a plan's learned spectral layer."""
+    return tuple(plan.shape), tuple(plan.spectrum_shape)
+
+
+def init_spectral_filter_params(key, plan, scale: float = 0.0,
+                                dtype=jnp.float32):
+    """Near-identity init: gate = 1 + scale*eps, filter = 1 + scale*eps.
+
+    Real parameters in both domains (a real filter is the common
+    physical case — attenuation per mode); ``scale=0`` gives the exact
+    identity layer, useful as a deterministic oracle start.
+    """
+    gshape, fshape = spectral_filter_shapes(plan)
+    kg, kf = jax.random.split(key)
+    dt = jnp.dtype(dtype)
+    return {
+        "gate": (jnp.ones(gshape, dt)
+                 + scale * jax.random.normal(kg, gshape, dt)),
+        "filter": (jnp.ones(fshape, dt)
+                   + scale * jax.random.normal(kf, fshape, dt)),
+    }
+
+
+def place_spectral_filter_params(plan, params):
+    """Shard the layer's params the way the plan wants its operands: the
+    gate with the input field, the filter with the output spectrum."""
+    if plan.mesh is None:
+        return params
+    return {
+        "gate": jax.device_put(params["gate"], plan.input_sharding),
+        "filter": jax.device_put(params["filter"], plan.output_sharding),
+    }
+
+
+def spectral_filter_apply(plan, params, x: jax.Array) -> jax.Array:
+    """``F(gate . x) . filter`` through the plan's fused epilogue."""
+    gated = (params["gate"] * x).astype(plan.input_dtype)
+    h = params["filter"].astype(plan.dtype)
+    return plan.forward_filtered(gated, h)

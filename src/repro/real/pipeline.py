@@ -267,7 +267,8 @@ def constrain_sharding(y: jax.Array, sharding: NamedSharding) -> jax.Array:
 def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
                   opts: Optional[FFTOptions] = None,
                   norm: Optional[str] = None,
-                  kspace_filter: Optional[jax.Array] = None) -> jax.Array:
+                  kspace_filter: Optional[jax.Array] = None,
+                  fold_filter: bool = False) -> jax.Array:
     """Distributed packed r2c: real (Nx, Ny, Nz) -> (Nx, Ny, Nz//2 + 1)
     in the z-local spectral layout.
 
@@ -291,24 +292,29 @@ def packed_rfft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
     reason = packed_unsupported_reason(x.shape, decomp, mesh, opts)
     if reason is not None:
         raise ValueError(f"packed r2c unsupported here: {reason}")
-    sched = build_packed_forward(decomp)
-    fn = shard_map(
-        functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
-        mesh=mesh,
-        in_specs=_with_batch_dims(sched.layout_in.partition_spec(), nbatch),
-        out_specs=_with_batch_dims(sched.layout_out.partition_spec(), nbatch))
-    out_sharding = NamedSharding(
-        mesh, _with_batch_dims(decomp.spectral_spec(), nbatch))
-    # one half-volume all-to-all brings z local (the schedule's recorded
-    # ExtraComm), so the odd-sized Nh axis stays unsharded and the plane
-    # unfold needs no cross-z traffic
-    packed = constrain_sharding(fn(x), out_sharding)
-    y = constrain_sharding(unfold_dc_plane(packed), out_sharding)
     scale = _norm_scale(x.shape, -1, norm)
-    if scale is not None:
-        y = y * jnp.asarray(scale, y.dtype)
+    cdtype = jnp.result_type(x.dtype, jnp.complex64)
+    # custom-vjp plans (repro.grad): the forward runs the same body +
+    # one half-volume all-to-all bringing z local (the schedule's
+    # recorded ExtraComm, so the odd-sized Nh axis stays unsharded and
+    # the plane unfold needs no cross-z traffic) + plane unfold + norm
+    # scale; the backward runs the adjoint schedule under the same opts
+    from repro.grad import vjp as grad_vjp
+    if kspace_filter is not None and fold_filter:
+        # folded epilogue: multiply the *packed* half spectrum inside the
+        # schedule, before the plane unfold — h must satisfy
+        # h(kz=0) == h(kz=Nyquist) with that plane real and 2-D-even
+        # (h[kx,ky] == h[-kx,-ky]); the filter's own Nyquist plane is
+        # never read (and gets a zero cotangent under differentiation)
+        hp = kspace_filter[..., : x.shape[-1] // 2].astype(cdtype)
+        plan = grad_vjp.packed_rfft_folded_plan(mesh, decomp, opts, scale,
+                                                nbatch, hp.ndim - 3)
+        return plan(x, hp)
+    y = grad_vjp.packed_rfft_plan(mesh, decomp, opts, scale, nbatch)(x)
     if kspace_filter is not None:
         from repro.kernels import spectral_scale as ss
+        out_sharding = NamedSharding(
+            mesh, _with_batch_dims(decomp.spectral_spec(), nbatch))
         y = constrain_sharding(
             ss.spectral_scale(y, kspace_filter.astype(y.dtype)), out_sharding)
     return y
@@ -329,17 +335,10 @@ def packed_irfft3d(y: jax.Array, nz: int, mesh: Mesh, decomp: Decomposition,
     reason = packed_unsupported_reason((nx, ny, nz), decomp, mesh, opts)
     if reason is not None:
         raise ValueError(f"packed c2r unsupported here: {reason}")
-    # fold in the z-local layout (mirror of the forward's epilogue); the
-    # shard_map in_specs below reshard the packed body back to the
-    # natural layout (the schedule's recorded ExtraComm)
-    y = constrain_sharding(y, NamedSharding(
-        mesh, _with_batch_dims(decomp.spectral_spec(), nbatch)))
-    packed = fold_dc_plane(y, nz)
-    sched = build_packed_inverse(decomp, nz)
-    fn = shard_map(
-        functools.partial(schedule_lib.run_schedule, sched=sched, opts=opts),
-        mesh=mesh,
-        in_specs=_with_batch_dims(sched.layout_in.partition_spec(), nbatch),
-        out_specs=_with_batch_dims(sched.layout_out.partition_spec(), nbatch))
-    x = fn(packed)
-    return x * jnp.asarray(_norm_scale((nx, ny, nz), +1, norm), x.dtype)
+    # custom-vjp plan (repro.grad): fold in the z-local layout (mirror of
+    # the forward's epilogue), reshard the packed body back to natural
+    # (the schedule's recorded ExtraComm), run the inverse body, scale
+    from repro.grad import vjp as grad_vjp
+    scale = _norm_scale((nx, ny, nz), +1, norm)
+    return grad_vjp.packed_irfft_plan(mesh, decomp, nz, opts, scale,
+                                      nbatch)(y)

@@ -36,10 +36,21 @@ packed/embed strategy axis (the two-for-one pipelines of ``repro.real``,
 pencil and slab alike, vs the embedding fallback), the schedule-derived
 cost model charges the packed stages at their true half-volume sizes,
 measurement runs real-input plans, and wisdom keys gain a problem
-dimension.  ``heterogeneous_impls=True`` additionally searches per-stage
-``local_impl`` 3-tuples, and ``batch=B`` plans for vmapped transforms
-(volume terms scale by B, collective launch counts do not; the wisdom
-key gains ``|b{B}``).
+dimension.  The ``_grad`` variants (``"c2c_grad"``/``"r2c_grad"``) plan a
+*training step*: same physical search space, but the cost model prices
+the forward schedule **plus** its adjoint (``repro.grad``), measurement
+races ``jax.value_and_grad`` through the plan, and the wisdom key gains a
+trailing ``|grad`` dimension.  ``heterogeneous_impls=True`` additionally
+searches per-stage ``local_impl`` 3-tuples, and ``batch=B`` plans for
+vmapped transforms (volume terms scale by B, collective launch counts do
+not; the wisdom key gains ``|b{B}``).
+
+The collective cost constants (alpha latency / beta inverse-bandwidth)
+are calibrated, not guessed, when data exists: ``benchmarks/
+collective_profile.py`` publishes its fitted alpha/beta to the metrics
+registry and a calibration JSON (``$CROFT_CALIBRATION``), and
+``cost_model.collective_constants`` picks them up with hardcoded
+fallbacks.
 
 Entry points: :func:`tune` below, ``Croft3D.tuned(...)`` /
 ``Croft3D(..., tune="model")`` in ``repro.core.api``, and the
@@ -47,19 +58,23 @@ Entry points: :func:`tune` below, ``Croft3D.tuned(...)`` /
 (``BENCH_tuning.json`` / ``BENCH_rfft.json``).
 """
 
-from repro.tuning.candidates import (Candidate, default_candidate,
-                                     decompositions_for, enumerate_candidates)
+from repro.tuning.candidates import (PROBLEMS, Candidate, default_candidate,
+                                     decompositions_for, enumerate_candidates,
+                                     split_grad)
 from repro.tuning.cost_model import (CostBreakdown, analytic_cost,
-                                     hlo_collectives, rank_candidates)
-from repro.tuning.measure import measure_candidate, time_forward
+                                     collective_constants, hlo_collectives,
+                                     per_stage_costs, rank_candidates)
+from repro.tuning.measure import (measure_candidate, time_forward,
+                                  time_train_step)
 from repro.tuning.planner import MODES, TuneResult, tune, upgrade_wisdom
 from repro.tuning.wisdom import (Wisdom, WisdomEntry, load_seed,
                                  merge_entries, wisdom_key)
 
 __all__ = [
-    "Candidate", "CostBreakdown", "MODES", "TuneResult", "Wisdom",
-    "WisdomEntry", "analytic_cost", "decompositions_for",
-    "default_candidate", "enumerate_candidates", "hlo_collectives",
-    "load_seed", "measure_candidate", "merge_entries", "rank_candidates",
-    "time_forward", "tune", "upgrade_wisdom", "wisdom_key",
+    "Candidate", "CostBreakdown", "MODES", "PROBLEMS", "TuneResult",
+    "Wisdom", "WisdomEntry", "analytic_cost", "collective_constants",
+    "decompositions_for", "default_candidate", "enumerate_candidates",
+    "hlo_collectives", "load_seed", "measure_candidate", "merge_entries",
+    "per_stage_costs", "rank_candidates", "split_grad", "time_forward",
+    "time_train_step", "tune", "upgrade_wisdom", "wisdom_key",
 ]

@@ -32,7 +32,18 @@ from repro.core.distributed import FFTOptions
 DEFAULT_OVERLAP_KS = (1, 2, 4)
 DEFAULT_LOCAL_IMPLS = ("matmul", "stockham", "xla")
 DEFAULT_LAYOUTS = ("natural", "spectral")
-PROBLEMS = ("c2c", "r2c")
+#: the ``_grad`` problems plan a *training step*: same search space as
+#: their base problem, but the cost model prices forward + adjoint
+#: schedule and measurement times ``jax.grad`` through the transform
+PROBLEMS = ("c2c", "r2c", "c2c_grad", "r2c_grad")
+GRAD_SUFFIX = "_grad"
+
+
+def split_grad(problem: str) -> tuple:
+    """``"r2c_grad" -> ("r2c", True)``; base problems pass through."""
+    if problem.endswith(GRAD_SUFFIX):
+        return problem[: -len(GRAD_SUFFIX)], True
+    return problem, False
 
 
 def _impl_str(impl) -> str:
@@ -67,7 +78,8 @@ class Candidate:
                    else f"/{_impl_str(o.overlap_mode)}")
                 + ("" if o.plan_cache else "/noplan"))
         if self.problem != "c2c":
-            base += f"/{self.problem}-{self.strategy}"
+            base += f"/{self.problem}" + (f"-{self.strategy}"
+                                          if self.strategy else "")
         return base
 
     # -- canonical string form ----------------------------------------------
@@ -81,7 +93,9 @@ class Candidate:
     def plan_key(self) -> str:
         key = f"{self.decomp.to_token()}|{self.opts.to_token()}"
         if self.problem != "c2c":
-            key += f"|{self.problem}:{self.strategy}"
+            # strategy may be None (grad c2c plans) — emit the empty
+            # string so from_plan_key round-trips it back to None
+            key += f"|{self.problem}:{self.strategy or ''}"
         return key
 
     @classmethod
@@ -95,6 +109,12 @@ class Candidate:
         if len(parts) == 2:
             return cls(decomp, opts)
         problem, _, strategy = parts[2].partition(":")
+        if problem not in PROBLEMS:
+            # reject rather than construct a plan for a problem class this
+            # version cannot build (e.g. a key written by a newer version)
+            # — callers treat ValueError as a cache miss, not a crash
+            raise ValueError(f"unknown problem {problem!r} in plan key "
+                             f"{key!r} (known: {PROBLEMS})")
         return cls(decomp, opts, problem=problem,
                    strategy=strategy or None)
 
@@ -170,6 +190,7 @@ def enumerate_candidates(
     """
     if problem not in PROBLEMS:
         raise ValueError(f"problem must be one of {PROBLEMS}, got {problem!r}")
+    base_problem, is_grad = split_grad(problem)
     impls = list(local_impls)
     if heterogeneous_impls:
         impls += _stagewise_impls(local_impls)
@@ -207,9 +228,13 @@ def enumerate_candidates(
                         out.append(Candidate(dec, FFTOptions(
                             overlap_k=k, local_impl=impl,
                             output_layout=layout, **var)))
-    if problem == "c2c":
-        return out
-    return _realize_r2c(shape, axis_sizes, out)
+    if base_problem == "r2c":
+        out = _realize_r2c(shape, axis_sizes, out)
+    if is_grad:
+        # same physical plans; the problem tag switches the cost model to
+        # fwd+adjoint pricing and measurement to a value_and_grad step
+        out = [dataclasses.replace(c, problem=problem) for c in out]
+    return out
 
 
 def _realize_r2c(shape, axis_sizes, base: list[Candidate]) -> list[Candidate]:
@@ -252,9 +277,10 @@ def default_candidate(shape: Sequence[int], axis_sizes: Mapping[str, int],
         if not dec.is_valid(shape, axis_sizes, 1):
             return None
         opts = dataclasses.replace(opts, overlap_k=1)
-    if problem == "r2c":
+    base_problem, _ = split_grad(problem)
+    if base_problem == "r2c":
         from repro.real import packed_unsupported_reason
         strategy = ("packed" if packed_unsupported_reason(
             shape, dec, axis_sizes, opts) is None else "embed")
-        return Candidate(dec, opts, problem="r2c", strategy=strategy)
-    return Candidate(dec, opts)
+        return Candidate(dec, opts, problem=problem, strategy=strategy)
+    return Candidate(dec, opts, problem=problem)

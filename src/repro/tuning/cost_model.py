@@ -73,6 +73,62 @@ LOCAL_PASSES = 10          # HBM round trips over the local block
 COLLECTIVE_LATENCY_S = 2e-6
 REPLAN_PASSES = 6          # twiddle re-materialization, options 1/3
 
+#: environment variable naming a calibration JSON (written by
+#: ``benchmarks/collective_profile.py``) with fitted
+#: ``collective_alpha_s`` / ``collective_beta_s_per_byte``
+CALIBRATION_ENV = "CROFT_CALIBRATION"
+_calibration_file_cache: dict = {}
+
+
+def _calibration_from_file() -> Optional[tuple]:
+    import json
+    import os
+    path = os.environ.get(CALIBRATION_ENV)
+    if not path or not os.path.exists(path):
+        return None
+    try:
+        mtime = os.path.getmtime(path)
+        cached = _calibration_file_cache.get(path)
+        if cached is not None and cached[0] == mtime:
+            return cached[1]
+        with open(path) as f:
+            d = json.load(f)
+        vals = (float(d["collective_alpha_s"]),
+                float(d["collective_beta_s_per_byte"]))
+        _calibration_file_cache[path] = (mtime, vals)
+        return vals
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def collective_constants() -> tuple:
+    """(alpha seconds-per-launch, beta seconds-per-byte) for collectives.
+
+    Precedence: live calibration published through the ``repro.obs``
+    metrics registry (``benchmarks/collective_profile.py``'s lstsq fit —
+    gauges ``collective_alpha_s`` / ``collective_beta_s_per_byte``) >
+    a saved calibration JSON named by ``$CROFT_CALIBRATION`` > the
+    hardcoded roofline constants.  Non-positive fits are ignored (a
+    degenerate lstsq on noisy walls can go negative — the hardcoded
+    floor is better than a nonsense model).
+    """
+    alpha, beta = COLLECTIVE_LATENCY_S, 1.0 / LINK_BW
+    file_vals = _calibration_from_file()
+    if file_vals is not None:
+        fa, fb = file_vals
+        alpha = fa if fa > 0 else alpha
+        beta = fb if fb > 0 else beta
+    try:
+        from repro.obs import metrics as metrics_lib
+        reg = metrics_lib.get_registry()
+        ga = reg.gauge("collective_alpha_s").value
+        gb = reg.gauge("collective_beta_s_per_byte").value
+        alpha = ga if ga and ga > 0 else alpha
+        beta = gb if gb and gb > 0 else beta
+    except Exception:
+        pass
+    return alpha, beta
+
 
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
@@ -113,11 +169,13 @@ def schedule_for(shape: Sequence[int], cand: Candidate) -> Schedule:
     spectrum volume, so its bytes and launch are charged like any other
     collective.
     """
-    if cand.problem == "r2c" and cand.strategy == "packed":
+    from repro.tuning.candidates import split_grad
+    base_problem, _ = split_grad(cand.problem)
+    if base_problem == "r2c" and cand.strategy == "packed":
         from repro.real import pipeline as real_pipeline
         return real_pipeline.build_packed_forward(cand.decomp)
     sched = build_schedule(cand.decomp, cand.opts, sign=-1)
-    if (cand.problem == "r2c" and cand.strategy == "embed"
+    if (base_problem == "r2c" and cand.strategy == "embed"
             and cand.opts.output_layout == "natural"):
         from repro.core.schedule import ExtraComm
         half = sched.layout_out.with_den(2, mul=2)
@@ -127,13 +185,43 @@ def schedule_for(shape: Sequence[int], cand: Candidate) -> Schedule:
     return sched
 
 
+def schedules_for(shape: Sequence[int], cand: Candidate) -> list:
+    """Every schedule one step of this candidate executes: the forward,
+    plus its adjoint (``repro.grad``) for the ``_grad`` problems — the
+    training-step cost is their sum, and the adjoint's stage structure
+    (same transposes, mirrored order) is priced with the same model."""
+    from repro.tuning.candidates import split_grad
+    sched = schedule_for(shape, cand)
+    _, is_grad = split_grad(cand.problem)
+    if not is_grad:
+        return [sched]
+    from repro.grad import adjoint_schedule
+    return [sched, adjoint_schedule(sched)]
+
+
 def analytic_cost(shape: Sequence[int], cand: Candidate,
                   axis_sizes: Mapping[str, int],
                   dtype=jnp.complex64, batch: int = 1) -> CostBreakdown:
+    """Modeled seconds for one execution of this candidate — one forward
+    transform, or one fwd+bwd pair for the ``_grad`` problems (the
+    schedules run sequentially, so their modeled times sum)."""
+    parts = [_schedule_cost(shape, cand, sched, axis_sizes, dtype, batch)
+             for sched in schedules_for(shape, cand)]
+    if len(parts) == 1:
+        return parts[0]
+    return CostBreakdown(**{
+        f.name: (sum(getattr(b, f.name) for b in parts)
+                 if f.name != "n_procs" else parts[0].n_procs)
+        for f in dataclasses.fields(CostBreakdown)})
+
+
+def _schedule_cost(shape: Sequence[int], cand: Candidate, sched: Schedule,
+                   axis_sizes: Mapping[str, int],
+                   dtype=jnp.complex64, batch: int = 1) -> CostBreakdown:
     decomp, opts = cand.decomp, cand.opts
     itemsize = jnp.dtype(dtype).itemsize
     p = decomp.n_procs(axis_sizes)
-    sched = schedule_for(shape, cand)
+    alpha, beta = collective_constants()
 
     # compute: one event per local FFT, at the schedule's reported size
     flops = 0.0
@@ -152,7 +240,7 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
 
     events = sched.comm_events(shape, axis_sizes, itemsize)
     coll_bytes = float(sum(ev["bytes"] for ev in events)) * batch
-    collective_s = coll_bytes / LINK_BW
+    collective_s = coll_bytes * beta
 
     # collective-op count: effective K chunks per in-body transpose (the
     # executor's chunk-indivisible fallback, read from the schedule); the
@@ -182,7 +270,7 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
             transpose_overhead_s += 2 * ev_bytes / HBM_BW
         elif impl == "pairwise":
             transpose_overhead_s += (ev["comm_size"] - 1) * ev_bytes / HBM_BW
-    latency_s = n_coll * COLLECTIVE_LATENCY_S
+    latency_s = n_coll * alpha
 
     replan_s = 0.0
     if not opts.plan_cache:
@@ -232,10 +320,20 @@ def per_stage_costs(shape: Sequence[int], cand: Candidate,
     modeled fraction of the stage's collective time hidden under
     compute — the per-stage form of the paper's 42-51% claim.
     """
+    rows = []
+    scheds = schedules_for(shape, cand)
+    for direction, sched in zip(("fwd", "bwd"), scheds):
+        rows.extend(_stage_rows(shape, cand, sched, axis_sizes, dtype,
+                                batch, direction))
+    return rows
+
+
+def _stage_rows(shape, cand, sched, axis_sizes, dtype, batch,
+                direction) -> list:
     opts = cand.opts
     itemsize = jnp.dtype(dtype).itemsize
-    sched = schedule_for(shape, cand)
     impl = opts.transpose_impl
+    _, beta = collective_constants()
     eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
 
     from repro.core.schedule import _flat, stage_category
@@ -263,7 +361,7 @@ def per_stage_costs(shape: Sequence[int], cand: Candidate,
         overlaps = False
         if st.comm_axis is not None:
             ev_bytes = pts.comm.bytes(shape, axis_sizes, itemsize) * batch
-            collective_s = ev_bytes / LINK_BW
+            collective_s = ev_bytes * beta
             k_eff = next(eff_ks)
             overlaps = impl != "pairwise" and (k_eff >= 2 or impl == "ring")
             if impl == "ring":
@@ -276,6 +374,7 @@ def per_stage_costs(shape: Sequence[int], cand: Candidate,
         rows.append({
             "stage": i,
             "name": st.name,
+            "direction": direction,
             "category": stage_category(st),
             "compute_s": compute_s,
             "collective_s": collective_s,
@@ -286,9 +385,10 @@ def per_stage_costs(shape: Sequence[int], cand: Candidate,
                                      if collective_s else None),
         })
     for ec in sched.extra_comms:
-        coll = ec.layout.bytes(shape, axis_sizes, itemsize) * batch / LINK_BW
+        coll = ec.layout.bytes(shape, axis_sizes, itemsize) * batch * beta
         rows.append({
-            "stage": None, "name": ec.name, "category": "collective",
+            "stage": None, "name": ec.name, "direction": direction,
+            "category": "collective",
             "compute_s": 0.0, "collective_s": coll, "k_eff": 1,
             "overlaps": False, "hidden_s": 0.0,
             "predicted_efficiency": 0.0 if coll else None,

@@ -70,14 +70,50 @@ def time_forward(plan, *, warmup: int = 2, iters: int = 5,
     return times[len(times) // 2]
 
 
+def time_train_step(plan, *, warmup: int = 2, iters: int = 5,
+                    batch: int = 1) -> float:
+    """Median wall seconds per ``value_and_grad`` step through the plan.
+
+    This is what a ``*_grad`` tune races: a scalar loss (sum |F x|^2)
+    differentiated back through the transform, so the timing covers the
+    forward schedule *and* the adjoint schedule the custom VJP replays —
+    the quantity a training loop actually pays per step.
+    """
+    in_dtype = getattr(plan, "input_dtype", plan.dtype)
+    fwd = jax.vmap(plan.forward) if batch > 1 else plan.forward
+    if batch > 1:
+        x = _random_input((batch,) + tuple(plan.shape), in_dtype,
+                          _batched_sharding(plan.input_sharding, batch))
+    else:
+        x = _random_input(plan.shape, in_dtype, plan.input_sharding)
+
+    def loss(v):
+        y = fwd(v)
+        return jnp.sum(jnp.real(y * jnp.conj(y)))
+
+    step = jax.jit(jax.value_and_grad(loss))
+    for _ in range(warmup):
+        jax.block_until_ready(step(x))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(x))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
 def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
                       dtype=jnp.complex64, *, warmup: int = 2,
                       iters: int = 5, batch: int = 1) -> Optional[float]:
     """Median forward seconds for one candidate on the live mesh (vmapped
     over ``batch`` stacked fields when batch > 1); None if the candidate
     fails to build/compile (it is then dropped from the race rather than
-    failing the whole tune)."""
+    failing the whole tune).  ``*_grad`` candidates race a full
+    ``value_and_grad`` step (see :func:`time_train_step`) on the base
+    problem's plan."""
     from repro.core.api import Croft3D
+    from repro.tuning.candidates import split_grad
     # tag_scope marks every span/transform emitted while timing as tuner
     # traffic, so a shared trace never confuses measurement runs with
     # serving traffic (the two interleave when the plan cache's
@@ -86,11 +122,12 @@ def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
         with tracer_lib.get_tracer().span("measure:candidate", "plan",
                                           plan=cand.label, batch=batch):
             try:
+                base_problem, is_grad = split_grad(cand.problem)
                 plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
-                               dtype=jnp.dtype(dtype), problem=cand.problem,
+                               dtype=jnp.dtype(dtype), problem=base_problem,
                                strategy=cand.strategy)
-                t = time_forward(plan, warmup=warmup, iters=iters,
-                                 batch=batch)
+                timer = time_train_step if is_grad else time_forward
+                t = timer(plan, warmup=warmup, iters=iters, batch=batch)
             except Exception:
                 metrics_lib.get_registry().counter(
                     "tune_measure_failures").inc()

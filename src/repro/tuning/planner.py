@@ -180,11 +180,13 @@ def tune(shape: Sequence[int], mesh=None, *,
             measured_s=best_t)
         if save and wis.path:
             # HLO collective stats ride along in persisted wisdom only —
-            # extracting them costs a recompile of the winner
+            # extracting them costs a recompile of the winner (Croft3D
+            # plans the base problem; grad-ness only changed the ranking)
             from repro.core.api import Croft3D
             entry.hlo = cost_model.hlo_collectives(
                 Croft3D(tuple(shape), mesh, best.decomp, best.opts,
-                        dtype=jnp.dtype(dtype), problem=best.problem,
+                        dtype=jnp.dtype(dtype),
+                        problem=cand_lib.split_grad(best.problem)[0],
                         strategy=best.strategy))
         result = TuneResult(decomp=best.decomp, opts=best.opts,
                             source="measure", key=key, ranked=ranked,

@@ -56,17 +56,21 @@ SEED_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 def wisdom_key(shape: Sequence[int], axis_sizes: Mapping[str, int],
                dtype, backend: str, problem: str = "c2c",
                batch: int = 1) -> str:
+    from repro.tuning.candidates import split_grad
     shape_s = "x".join(str(int(s)) for s in shape)
     # canonical order: the same problem must hash identically regardless
     # of how the caller ordered the axis mapping
     mesh_s = ",".join(f"{n}={int(s)}"
                       for n, s in sorted(axis_sizes.items()))
     key = f"{shape_s}|{mesh_s}|{np.dtype(dtype).name}|{backend}"
-    if problem != "c2c":  # c2c keys keep the legacy four-field format
-        key += f"|{problem}"
+    base_problem, is_grad = split_grad(problem)
+    if base_problem != "c2c":  # c2c keys keep the legacy four-field format
+        key += f"|{base_problem}"
     if batch != 1:  # unbatched keys keep the legacy format (= b1), so
         key += f"|b{int(batch)}"  # wisdom written before the batch
         # dimension existed still hits for batch=1 problems
+    if is_grad:  # training-step plans never collide with inference plans
+        key += "|grad"
     return key
 
 

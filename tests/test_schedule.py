@@ -16,6 +16,7 @@ from conftest import run_multidevice
 from repro.core import Decomposition, FFTOptions
 from repro.core import schedule as schedule_lib
 from repro.core.distributed import build_schedule
+from repro.grad import adjoint_schedule
 from repro.real.pipeline import build_packed_forward, build_packed_inverse
 from repro import tuning
 
@@ -102,6 +103,44 @@ schedule slab/c2r/packed sign=+1
   2 repack+z-ifft+split: repack2[x] | fft[z]@s2 | split2[x] -> R(Nx/p, Ny, Nz)
   + reshard x-localize: C(Nx, Ny, Nz:2/p) (one fused all-to-all)
   out: R(Nx/p, Ny, Nz)""",
+    # adjoint schedules (repro.grad): the backward pass of each pinned
+    # forward is itself a pinned schedule — stage order reversed, each
+    # transpose's split/concat swapped, each packed op replaced by its
+    # explicit transpose.  A refactor that silently changes what the
+    # training backward runs fails here, same as a forward change.
+    "adj-pencil-natural": """\
+schedule pencil/c2c/natural^T sign=-1
+  in : C(Nx, Ny/data, Nz/model)
+  0 adj-comm-restore-xy: a2a[data] split=0 concat=1 chunk=2 -> C(Nx/data, Ny, Nz/model)
+  1 adj-comm-restore-yz: a2a[model] split=1 concat=2 chunk=0 -> C(Nx/data, Ny/model, Nz)
+  2 adj-z-fft: fft[z]@s0 | a2a[model] split=2 concat=1 chunk=0 -> C(Nx/data, Ny, Nz/model)
+  3 adj-y-fft+yz: fft[y]@s1 | a2a[data] split=1 concat=0 chunk=2 -> C(Nx, Ny/data, Nz/model)
+  4 adj-x-fft+xy: fft[x]@s2 -> C(Nx, Ny/data, Nz/model)
+  out: C(Nx, Ny/data, Nz/model)""",
+    "adj-pencil-spectral": """\
+schedule pencil/c2c/spectral^T sign=-1
+  in : C(Nx/data, Ny/model, Nz)
+  0 adj-z-fft: fft[z]@s0 | a2a[model] split=2 concat=1 chunk=0 -> C(Nx/data, Ny, Nz/model)
+  1 adj-y-fft+yz: fft[y]@s1 | a2a[data] split=1 concat=0 chunk=2 -> C(Nx, Ny/data, Nz/model)
+  2 adj-x-fft+xy: fft[x]@s2 -> C(Nx, Ny/data, Nz/model)
+  out: C(Nx, Ny/data, Nz/model)""",
+    "adj-packed-pencil-fwd": """\
+schedule pencil/r2c/packed^T sign=-1
+  in : C(Nx, Ny/data, Nz:2/model)
+  0 adj-x-fft: fft[x]@s0 | a2a[data] split=0 concat=1 chunk=2 -> C(Nx/data, Ny, Nz:2/model)
+  1 adj-y-fft+yx: fft[y]@s1 | a2a[model] split=1 concat=2 chunk=0 -> C(Nx/data, Ny/model, Nz:2)
+  2 adj-pack+z-rfft+zy: unpack2T[y] | fft[z]@s2 | pack2T[y] -> R(Nx/data, Ny/model, Nz)
+  + reshard adj-z-localize: C(Nx, Ny/data, Nz:2/model) (one fused all-to-all)
+  out: R(Nx/data, Ny/model, Nz)""",
+    "adj-packed-slab-fwd": """\
+schedule slab/r2c/packed^T sign=-1
+  in : C(Nx, Ny, Nz:2/p)
+  0 adj-x-fft: fft[x]@s0 -> C(Nx, Ny, Nz:2/p)
+  1 adj-y-fft: fft[y]@s1 -> C(Nx, Ny, Nz:2/p)
+  2 adj-comm-pack+z-rfft+zx: a2a[p] split=0 concat=2 chunk=1 -> C(Nx/p, Ny, Nz:2)
+  3 adj-pack+z-rfft+zx: unpack2T[x] | fft[z]@s2 | pack2T[x] -> R(Nx/p, Ny, Nz)
+  + reshard adj-z-localize: C(Nx, Ny, Nz:2/p) (one fused all-to-all)
+  out: R(Nx/p, Ny, Nz)""",
 }
 
 
@@ -118,6 +157,13 @@ def _built():
         "packed-pencil-inv": build_packed_inverse(PENCIL, 32),
         "packed-slab-fwd": build_packed_forward(SLAB),
         "packed-slab-inv": build_packed_inverse(SLAB, 32),
+        "adj-pencil-natural": adjoint_schedule(
+            build_schedule(PENCIL, FFTOptions())),
+        "adj-pencil-spectral": adjoint_schedule(
+            build_schedule(PENCIL, FFTOptions(output_layout="spectral"))),
+        "adj-packed-pencil-fwd": adjoint_schedule(
+            build_packed_forward(PENCIL)),
+        "adj-packed-slab-fwd": adjoint_schedule(build_packed_forward(SLAB)),
     }
 
 
@@ -545,3 +591,126 @@ def test_spectral_scale_helper_matches_reference(rng):
     ker = np.asarray(spectral_scale(jnp.asarray(x), jnp.asarray(h), 0.5,
                                     use_pallas=True, interpret=True))
     np.testing.assert_allclose(ker, ref, atol=1e-6)
+
+
+# --- adjoint schedules (repro.grad) ------------------------------------------
+
+def test_adjoint_mirrors_layouts_and_comm_volume():
+    """The adjoint runs output-layout -> input-layout with the same
+    transpose count and the same total moved bytes — the symbolic
+    foundation under the ``_grad`` cost model and the backward-HLO
+    mirror gate in ``benchmarks.train_bench``."""
+    shape = (32, 32, 32)
+    cases = [
+        (build_schedule(PENCIL, FFTOptions()), SIZES),
+        (build_schedule(PENCIL, FFTOptions(output_layout="spectral")),
+         SIZES),
+        (build_schedule(SLAB, FFTOptions()), {"p": 8}),
+        (build_schedule(CELL, FFTOptions()), {"a": 2, "b": 2, "c": 2}),
+        (build_packed_forward(PENCIL), SIZES),
+        (build_packed_forward(SLAB), {"p": 8}),
+    ]
+    for sched, sizes in cases:
+        adj = adjoint_schedule(sched)
+        assert (adj.layout_in.partition_spec()
+                == sched.layout_out.partition_spec()), sched.name
+        assert (adj.layout_out.partition_spec()
+                == sched.layout_in.partition_spec()), sched.name
+        assert adj.transpose_count() == sched.transpose_count(), sched.name
+        fwd_bytes = sum(ev["bytes"] for ev in sched.comm_events(shape, sizes))
+        adj_bytes = sum(ev["bytes"] for ev in adj.comm_events(shape, sizes))
+        assert adj_bytes == fwd_bytes, sched.name
+
+
+def test_cost_model_grad_prices_forward_plus_adjoint():
+    """``c2c_grad`` is modeled as the forward schedule plus its adjoint:
+    exactly double every volume/launch term when the adjoint is an exact
+    mirror (all c2c layouts), and strictly pricier-than-forward for the
+    packed r2c pipeline (mirrored comm, halved-volume compute)."""
+    shape = (64,) * 3
+    for opts in (FFTOptions(), FFTOptions(output_layout="spectral")):
+        b = tuning.analytic_cost(shape, tuning.Candidate(PENCIL, opts), SIZES)
+        g = tuning.analytic_cost(
+            shape, tuning.Candidate(PENCIL, opts, problem="c2c_grad"), SIZES)
+        assert g.flops == 2 * b.flops
+        assert g.collective_bytes == 2 * b.collective_bytes
+        assert g.n_collectives == 2 * b.n_collectives
+        assert g.total_s == pytest.approx(2 * b.total_s)
+    spec = FFTOptions(output_layout="spectral")
+    rb = tuning.analytic_cost(shape, tuning.Candidate(
+        PENCIL, spec, problem="r2c", strategy="packed"), SIZES)
+    rg = tuning.analytic_cost(shape, tuning.Candidate(
+        PENCIL, spec, problem="r2c_grad", strategy="packed"), SIZES)
+    assert rb.total_s < rg.total_s <= 2.5 * rb.total_s
+    assert rg.collective_bytes == 2 * rb.collective_bytes
+
+
+def test_per_stage_costs_grad_directions_and_launch_prediction():
+    """``per_stage_costs`` rows for a ``_grad`` candidate split into fwd
+    and bwd directions, and the bwd all-to-all launch prediction (one per
+    effective-K chunk) mirrors the forward exactly — this is the number
+    the training bench gates the compiled backward HLO against."""
+    cand = tuning.Candidate(
+        PENCIL, FFTOptions(output_layout="spectral", overlap_k=2),
+        problem="c2c_grad")
+    rows = tuning.per_stage_costs((32,) * 3, cand, SIZES)
+    fwd = [r for r in rows if r["direction"] == "fwd"]
+    bwd = [r for r in rows if r["direction"] == "bwd"]
+    assert fwd and bwd and len(fwd) + len(bwd) == len(rows)
+    launches = lambda rs: sum(int(r["k_eff"]) for r in rs
+                              if r["collective_s"] > 0)
+    # 2 transposes x K=2 chunks each way
+    assert launches(fwd) == launches(bwd) == 4
+    # non-grad candidates stay single-direction (back-compat)
+    base = tuning.per_stage_costs(
+        (32,) * 3, tuning.Candidate(PENCIL, FFTOptions()), SIZES)
+    assert {r["direction"] for r in base} == {"fwd"}
+
+
+def test_wisdom_key_grad_dimension():
+    """``|grad`` is a key dimension like batch: appended last, after the
+    problem and ``|b{B}`` slots, so forward wisdom never aliases a
+    training-step entry and legacy keys are untouched."""
+    base = tuning.wisdom_key((32,) * 3, SIZES, jnp.complex64, "cpu")
+    kg = tuning.wisdom_key((32,) * 3, SIZES, jnp.complex64, "cpu",
+                           "c2c_grad")
+    assert kg == base + "|grad"
+    kr = tuning.wisdom_key((32,) * 3, SIZES, jnp.complex64, "cpu",
+                           "r2c_grad", 4)
+    assert kr.endswith("|r2c|b4|grad")
+    assert tuning.wisdom_key((32,) * 3, SIZES, jnp.complex64, "cpu",
+                             "r2c", 4) == kr[: -len("|grad")]
+
+
+def test_ring_adjoint_collective_permute_rounds():
+    """Ring-transpose pullback: the compiled backward issues exactly the
+    forward's collective-permute count — K*(P_axis-1) rounds summed over
+    stages — i.e. the custom VJP replays the ring schedule rather than
+    letting XLA invent a different (or impossible) transpose."""
+    run_multidevice("""
+import jax, jax.numpy as jnp
+from repro.core import Croft3D, Decomposition, FFTOptions
+from repro.launch import hlo_cost
+mesh = jax.make_mesh((2,4), ("data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+dec = Decomposition("pencil", ("data","model"))
+N, K = 16, 2
+plan = Croft3D((N,N,N), mesh, dec,
+               FFTOptions(output_layout="spectral", transpose_impl="ring",
+                          overlap_k=K))
+x = jax.device_put(jnp.zeros((N,N,N), jnp.complex64), plan.input_sharding)
+
+def counts(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return {k: int(v["count"])
+            for k, v in hlo_cost.analyze(txt).collectives.items()}
+
+fwd = counts(plan._fwd, x)
+y, pull = jax.vjp(plan._fwd, x)
+bwd = counts(pull, jnp.ones_like(y))
+# spectral pencil: one ring stage over data (P=2), one over model (P=4)
+expect = K * (2 - 1) + K * (4 - 1)
+assert fwd.get("collective-permute", 0) == expect, fwd
+assert bwd == fwd, (fwd, bwd)
+print("OK ring adjoint rounds", expect)
+""", timeout=900)

@@ -283,6 +283,124 @@ def test_candidate_plan_key_roundtrip_covers_every_knob():
         assert back == c, c.plan_key
 
 
+def test_grad_candidates_mirror_base_space():
+    """``c2c_grad``/``r2c_grad`` reuse the base search space knob-for-knob
+    (the adjoint is derived, never searched) with only the problem tag
+    changed."""
+    base = tuning.enumerate_candidates(SHAPE, SIZES)
+    grad = tuning.enumerate_candidates(SHAPE, SIZES, problem="c2c_grad")
+    assert [(c.decomp, c.opts) for c in grad] \
+        == [(c.decomp, c.opts) for c in base]
+    assert all(c.problem == "c2c_grad" for c in grad)
+    rbase = tuning.enumerate_candidates(SHAPE, SIZES, problem="r2c")
+    rgrad = tuning.enumerate_candidates(SHAPE, SIZES, problem="r2c_grad")
+    assert [(c.decomp, c.opts, c.strategy) for c in rgrad] \
+        == [(c.decomp, c.opts, c.strategy) for c in rbase]
+    assert {c.strategy for c in rgrad} == {"embed", "packed"}
+    d = tuning.default_candidate(SHAPE, SIZES, problem="r2c_grad")
+    assert d is not None and d.problem == "r2c_grad"
+
+
+def test_grad_plan_keys_roundtrip_and_reject_unknown_problems():
+    """Grad plan keys round trip (including strategy=None, which must not
+    serialize as the string "None"), and an unknown problem tag is a loud
+    ValueError — a stale or foreign wisdom entry becomes a miss upstream,
+    never a misparsed plan."""
+    cands = (tuning.enumerate_candidates(SHAPE, SIZES, problem="c2c_grad")
+             + tuning.enumerate_candidates(SHAPE, SIZES, problem="r2c_grad"))
+    assert len({c.plan_key for c in cands}) == len(set(cands))
+    for c in cands:
+        assert tuning.Candidate.from_plan_key(c.plan_key) == c, c.plan_key
+    good = cands[0].plan_key
+    with pytest.raises(ValueError, match="unknown problem"):
+        tuning.Candidate.from_plan_key(good.replace("c2c_grad", "c2c_hess"))
+    # and a grad entry survives the wisdom JSON round trip as a real
+    # candidate (so `wisdom show`/`stats` render it, not <unreadable>)
+    entry = tuning.WisdomEntry.from_candidate(cands[-1], "measure",
+                                              measured_s=1e-3)
+    back = tuning.WisdomEntry.from_json(
+        json.loads(json.dumps(entry.to_json()))).candidate()
+    assert back == cands[-1]
+
+
+def test_tune_model_mode_grad_problem(tmp_path):
+    """mode="model" prices fwd+adjoint for ``_grad`` problems, records
+    under the ``|grad`` key, and the entry replays as a wisdom hit."""
+    path = str(tmp_path / "w.json")
+    r = tuning.tune(SHAPE, axis_sizes=SIZES, mode="model",
+                    problem="c2c_grad", wisdom_path=path)
+    assert r.key.endswith("|grad")
+    base = tuning.tune(SHAPE, axis_sizes=SIZES, mode="model")
+    assert r.key != base.key
+    hit = tuning.Wisdom.load(path).lookup(r.key)
+    assert hit is not None and hit.candidate().problem == "c2c_grad"
+    r2 = tuning.tune(SHAPE, axis_sizes=SIZES, mode="wisdom",
+                     problem="c2c_grad", wisdom_path=path)
+    assert r2.source == "wisdom"
+    assert r2.decomp == r.decomp and r2.opts == r.opts
+
+
+def test_wisdom_cli_tolerates_grad_and_foreign_entries(tmp_path, capsys):
+    """``wisdom show``/``stats`` must render ``|grad`` entries and
+    survive an entry whose problem tag this version does not know (a
+    newer or foreign wisdom file): unreadable at worst, never a crash."""
+    from repro.tuning import wisdom as wisdom_lib
+    path = str(tmp_path / "w.json")
+    tuning.tune(SHAPE, axis_sizes=SIZES, mode="model", problem="r2c_grad",
+                wisdom_path=path)
+    with open(path) as f:
+        blob = json.load(f)
+    key, d = next(iter(blob["entries"].items()))
+    assert key.endswith("|grad")
+    blob["entries"][key.replace("|grad", "|hess")] = dict(d,
+                                                          problem="c2c_hess")
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    assert wisdom_lib._main(["show", path]) == 0
+    assert wisdom_lib._main(["stats", path]) == 0
+    out = capsys.readouterr().out
+    assert "|grad" in out
+
+
+# --- calibrated collective constants -----------------------------------------
+
+def test_collective_constants_calibration_precedence(tmp_path, monkeypatch):
+    """(alpha, beta) precedence: live obs-registry gauges > the
+    ``$CROFT_CALIBRATION`` JSON > hardcoded roofline constants; a
+    non-positive fit is ignored rather than trusted."""
+    from repro.obs import metrics as metrics_lib
+    from repro.tuning import cost_model
+    reg = metrics_lib.get_registry()
+    ga = reg.gauge("collective_alpha_s")
+    gb = reg.gauge("collective_beta_s_per_byte")
+    old = (ga.value, gb.value)
+    ga.set(0.0)
+    gb.set(0.0)
+    monkeypatch.delenv(cost_model.CALIBRATION_ENV, raising=False)
+    try:
+        assert cost_model.collective_constants() == (
+            cost_model.COLLECTIVE_LATENCY_S, 1.0 / cost_model.LINK_BW)
+        path = str(tmp_path / "calibration.json")
+        with open(path, "w") as f:
+            json.dump({"collective_alpha_s": 3e-6,
+                       "collective_beta_s_per_byte": 2e-11}, f)
+        monkeypatch.setenv(cost_model.CALIBRATION_ENV, path)
+        assert cost_model.collective_constants() == (3e-6, 2e-11)
+        ga.set(5e-6)
+        gb.set(-1.0)  # degenerate lstsq fit: must fall through
+        assert cost_model.collective_constants() == (5e-6, 2e-11)
+        # the calibrated constants actually move the model
+        base = tuning.analytic_cost(SHAPE, tuning.Candidate(
+            Decomposition("pencil", ("data", "model")), FFTOptions()), SIZES)
+        ga.set(5e-3)
+        slow = tuning.analytic_cost(SHAPE, tuning.Candidate(
+            Decomposition("pencil", ("data", "model")), FFTOptions()), SIZES)
+        assert slow.latency_s > base.latency_s
+    finally:
+        ga.set(old[0])
+        gb.set(old[1])
+
+
 def test_candidate_label_distinguishes_overlap_mode():
     """Regression: the planner's measured={label: t} dict used to alias
     candidates differing only in overlap_mode."""
