@@ -217,7 +217,7 @@ b_fwd = hlo_cost.analyze(fplan._fwd.lower(nxx).compile().as_text()).bytes
 # the spectrum operand of the separate multiply has h's shape/sharding
 b_mul = hlo_cost.analyze(mul.lower(nhh, nhh).compile().as_text()).bytes
 b_fused = hlo_cost.analyze(
-    fplan._fwd_filtered.lower(nxx, nhh).compile().as_text()).bytes
+    fplan._filtered_fn().lower(nxx, nhh).compile().as_text()).bytes
 report["fused_epilogue"] = {{
     "shape": ftag,
     "wall_s_unfused": min(fwalls["unfused"]),
