@@ -26,8 +26,9 @@ import traceback
 FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.kernel_micro", "benchmarks.lm_roofline",
                 "benchmarks.train_bench", "benchmarks.tuning_bench",
-                "benchmarks.rfft_bench", "benchmarks.overlap_bench",
-                "benchmarks.serve_bench", "benchmarks.trace_smoke"]
+                "benchmarks.search_bench", "benchmarks.rfft_bench",
+                "benchmarks.overlap_bench", "benchmarks.serve_bench",
+                "benchmarks.trace_smoke"]
 
 
 def main() -> None:

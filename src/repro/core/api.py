@@ -63,6 +63,12 @@ class Croft3D:
     wisdom_path: Optional[str] = None
     #: extra keyword arguments for ``tuning.tune`` (top_k, measure_iters, ...)
     tune_kw: Optional[dict] = None
+    #: searched pipeline (``tuning.candidates.ScheduleCandidate``): when
+    #: set, forward/inverse run this explicit stage list (per-stage
+    #: transpose impls / K) instead of the fixed builders; ``decomp`` and
+    #: ``opts`` are taken from it.  c2c only.  Set directly, or by the
+    #: tune path when the planner's schedule search picks one.
+    schedule: Optional[object] = None
     tune_result = None  # TuneResult when the planner picked the plan
 
     def __post_init__(self):
@@ -85,12 +91,29 @@ class Croft3D:
             self.decomp, self.opts = result.decomp, result.opts
             if self.problem == "r2c":
                 self.strategy = result.strategy
+            self.schedule = getattr(result, "schedule", None)
             self.tune_result = result
+        if self.schedule is not None:
+            if self.problem != "c2c":
+                raise ValueError("schedule= (a searched pipeline) plans "
+                                 "the c2c problem only")
+            if self.mesh is None:
+                raise ValueError("schedule= needs a mesh")
+            self.decomp, self.opts = self.schedule.decomp, self.schedule.opts
         if self.mesh is not None:
             if self.decomp is None:
                 raise ValueError("a mesh requires a Decomposition")
-            self.decomp.validate(self.shape, self.mesh, self.opts.overlap_k,
-                                 self.opts.transpose_impl)
+            if self.schedule is not None:
+                # basic mesh/axis checks at the weakest fixed-builder
+                # settings, then the searched pipeline's own shape checks
+                # (its transpose orders chunk along different axes than
+                # the fixed pipelines, so the fixed K rules don't apply)
+                self.decomp.validate(self.shape, self.mesh, 1, "alltoall")
+                self.schedule.validate(self.shape, dict(self.mesh.shape))
+            else:
+                self.decomp.validate(self.shape, self.mesh,
+                                     self.opts.overlap_k,
+                                     self.opts.transpose_impl)
         if self.problem == "r2c":
             from repro import real as real_lib
             from repro.core import rfft
@@ -101,6 +124,15 @@ class Croft3D:
                 v, self.mesh, self.decomp, self.opts, strategy=strat))
             self._inv = jax.jit(lambda v: rfft.irfft3d(
                 v, nz, self.mesh, self.decomp, self.opts, strategy=strat))
+        elif self.schedule is not None:
+            fsched = self.schedule.build_schedule()
+            isched = distributed.inverse_schedule(fsched)
+            self._sched_fwd = fsched
+            mesh, opts = self.mesh, self.opts
+            self._fwd = jax.jit(lambda v: distributed.scheduled_fft3d(
+                v, mesh, fsched, opts))
+            self._inv = jax.jit(lambda v: distributed.scheduled_fft3d(
+                v, mesh, isched, opts, norm="backward"))
         else:
             self._fwd = jax.jit(lambda v: distributed.fft3d(
                 v, self.mesh, self.decomp, self.opts))
@@ -132,6 +164,9 @@ class Croft3D:
             # packed real input is z-pencils: the r2c stage runs first,
             # so the pipeline starts where the c2c pipeline ends
             return NamedSharding(self.mesh, self.decomp.spectral_spec())
+        if self.schedule is not None:
+            return NamedSharding(self.mesh,
+                                 self._sched_fwd.layout_in.partition_spec())
         return self.decomp.sharding(self.mesh, "natural")
 
     @property
@@ -148,6 +183,12 @@ class Croft3D:
                 return NamedSharding(self.mesh, P(
                     self.decomp.axes[0], self.decomp.axes[1], None))
             return NamedSharding(self.mesh, self.decomp.spectral_spec())
+        if self.schedule is not None:
+            # searched transpose orders can end on layouts no fixed spec
+            # names (e.g. x sharded by the z communicator) — the
+            # schedule's own symbolic output layout is the truth
+            return NamedSharding(self.mesh,
+                                 self._sched_fwd.layout_out.partition_spec())
         return self.decomp.sharding(self.mesh, self.opts.output_layout)
 
     def local_shape(self) -> tuple[int, ...]:
@@ -181,6 +222,10 @@ class Croft3D:
                 raise ValueError("fold=True is the packed r2c folded "
                                  "epilogue; c2c filters are always fused "
                                  "in-schedule")
+            elif self.schedule is not None:
+                mesh, opts, fsched = self.mesh, self.opts, self._sched_fwd
+                fn = jax.jit(lambda v, hh: distributed.scheduled_fft3d(
+                    v, mesh, fsched, opts, kspace_filter=hh))
             else:
                 fn = jax.jit(lambda v, hh: distributed.fft3d(
                     v, self.mesh, self.decomp, self.opts, kspace_filter=hh))
@@ -335,6 +380,19 @@ class Croft3D:
                                     sharding=self.input_sharding)
         return self._fwd.lower(spec)
 
+    def candidate(self):
+        """This plan's tuner-space identity: the searched
+        ``ScheduleCandidate`` when one was picked, else the
+        (decomp, opts) ``Candidate`` — the object the cost model, the
+        tracer attribution and the serve bucket keys all read."""
+        from repro.tuning.candidates import Candidate
+        if self.schedule is not None:
+            if self.schedule.problem == self.problem:
+                return self.schedule
+            return dataclasses.replace(self.schedule, problem=self.problem)
+        return Candidate(self.decomp, self.opts, problem=self.problem,
+                         strategy=self.strategy)
+
     def _forward_schedule(self):
         """The stage schedule ``forward`` executes (None when meshless) —
         the tuner's ``cost_model.schedule_for``, so this plan's roofline
@@ -343,11 +401,8 @@ class Croft3D:
         half-slice)."""
         if self.mesh is None or self.decomp is None:
             return None
-        from repro.tuning.candidates import Candidate
         from repro.tuning.cost_model import schedule_for
-        return schedule_for(self.shape, Candidate(
-            self.decomp, self.opts, problem=self.problem,
-            strategy=self.strategy))
+        return schedule_for(self.shape, self.candidate())
 
     def flops_model(self) -> float:
         """Analytic 5 N log2 N FLOP count for the full 3-D transform,

@@ -241,6 +241,52 @@ def build_schedule(decomp: Decomposition, opts: FFTOptions,
                                   from_spectral=from_spectral)
 
 
+def inverse_schedule(sched: schedule_lib.Schedule) -> schedule_lib.Schedule:
+    """The unnormalized inverse of a pure c2c schedule.
+
+    The adjoint transform reverses the pipeline (every transpose swaps
+    split/concat; per-stage impl/K overrides ride along) and a 1-D DFT
+    matrix is symmetric, so the adjoint with the sign flipped *is* the
+    inverse up to the 1/N factor the caller applies via ``norm``.  This
+    is how searched schedules — which have no fixed inverse builder —
+    get their ``ifft``.  Restricted to pure complex pipelines: packing
+    prologues/epilogues and out-of-body reshards are not sign-symmetric.
+    """
+    if any(st.prologue or st.epilogue for st in sched.stages) \
+            or sched.epilogue or sched.extra_comms:
+        raise ValueError("inverse_schedule covers pure c2c schedules only")
+    from repro.grad.adjoint import adjoint_schedule
+    adj = adjoint_schedule(sched)
+    return dataclasses.replace(adj, name=f"{sched.name}^-1",
+                               sign=-sched.sign, points=None)
+
+
+def scheduled_fft3d(x: jax.Array, mesh: Mesh,
+                    sched: schedule_lib.Schedule,
+                    opts: Optional[FFTOptions] = None,
+                    norm: Optional[str] = None,
+                    kspace_filter: Optional[jax.Array] = None) -> jax.Array:
+    """Run a prebuilt :class:`~repro.core.schedule.Schedule` — the entry
+    point for searched pipelines, which exist only as schedule objects.
+
+    Same contract as :func:`distributed_fft3d` (vjp-routed, plan-cached
+    via ``grad_vjp.linear_plan``, optional fused k-space filter), minus
+    the fixed-builder step: shardings come from the schedule's own
+    symbolic layouts.
+    """
+    if opts is None:
+        opts = FFTOptions()
+    if x.ndim != 3:
+        raise ValueError("scheduled_fft3d expects a rank-3 (Nx,Ny,Nz) array; "
+                         "vmap for batches")
+    scale = _norm_scale(x.shape, sched.sign, norm)
+    from repro.grad import vjp as grad_vjp
+    if kspace_filter is None:
+        return grad_vjp.linear_plan(mesh, sched, opts, scale).apply(x)
+    plan = grad_vjp.filtered_plan(mesh, sched, opts, scale)
+    return plan(x, kspace_filter.astype(x.dtype))
+
+
 def distributed_fft3d(x: jax.Array, mesh: Mesh, decomp: Decomposition,
                       sign: int = -1, opts: Optional[FFTOptions] = None,
                       norm: Optional[str] = None,

@@ -338,6 +338,12 @@ class Stage:
     involved in the transpose): chunk i's collective has no data
     dependence on chunk i+1's FFT, so XLA's async collective scheduler
     overlaps them — the paper's second OpenMP thread.
+
+    ``transpose_impl`` / ``overlap_k`` are *per-stage* overrides of the
+    same-named :class:`FFTOptions` knobs (None = inherit).  They are what
+    the schedule-space search tunes: ring on the small communicator,
+    alltoall on the large one, different K per stage — OpenFFT's
+    per-exchange pattern choice, expressed in the IR the executor runs.
     """
 
     name: str
@@ -349,6 +355,21 @@ class Stage:
     impl_stage: int = 0
     prologue: tuple = ()
     epilogue: tuple = ()
+    transpose_impl: Optional[str] = None
+    overlap_k: Optional[int] = None
+
+
+def stage_transpose_impl(st: Stage, opts) -> str:
+    """The transpose implementation this stage actually runs (its own
+    override when set, else the plan-wide ``opts.transpose_impl``)."""
+    return st.transpose_impl if st.transpose_impl is not None \
+        else opts.transpose_impl
+
+
+def stage_overlap_k(st: Stage, opts) -> int:
+    """The chunk count this stage actually targets (its own override when
+    set, else the plan-wide ``opts.overlap_k``)."""
+    return st.overlap_k if st.overlap_k is not None else opts.overlap_k
 
 
 @dataclasses.dataclass(frozen=True)
@@ -440,8 +461,8 @@ class Schedule:
         for i, st in self.comm_stages():
             ext = self.points[i].entry.local_shape(shape, axis_sizes)[
                 st.chunk_axis]
-            out.append(overlap_k if overlap_k > 1 and ext % overlap_k == 0
-                       else 1)
+            k = st.overlap_k if st.overlap_k is not None else overlap_k
+            out.append(k if k > 1 and ext % k == 0 else 1)
         return tuple(out)
 
     def fft_events(self, shape: Sequence[int], axis_sizes) -> list:
@@ -493,9 +514,13 @@ class Schedule:
                 parts.append(f"fft[{_DIMS[st.fft_axis]}]@s{st.impl_stage}")
             parts.extend(op.describe() for op in st.epilogue)
             if st.comm_axis is not None:
-                parts.append(
-                    f"a2a[{_axis_str(st.comm_axis)}] split={st.split_axis} "
-                    f"concat={st.concat_axis} chunk={st.chunk_axis}")
+                a2a = (f"a2a[{_axis_str(st.comm_axis)}] split={st.split_axis} "
+                       f"concat={st.concat_axis} chunk={st.chunk_axis}")
+                if st.transpose_impl is not None:
+                    a2a += f" impl={st.transpose_impl}"
+                if st.overlap_k is not None:
+                    a2a += f" K={st.overlap_k}"
+                parts.append(a2a)
             lines.append(f"  {i} {st.name}: " + " | ".join(parts)
                          + f" -> {pts.out}")
         for op in self.epilogue:
@@ -532,7 +557,7 @@ def _pack_pieces(blk: jax.Array, axis: AxisName, split_axis: int) -> list:
 
 
 def _ring_transpose(blk: jax.Array, axis: AxisName, split_axis: int,
-                    concat_axis: int) -> jax.Array:
+                    concat_axis: int, round_cb=None) -> jax.Array:
     """P-1-round ring transpose: pack -> send -> unpack, no serial chain.
 
     The rounds are structurally independent (each ppermute consumes its
@@ -552,7 +577,12 @@ def _ring_transpose(blk: jax.Array, axis: AxisName, split_axis: int,
     recv = [pieces[0]]                      # round 0: my own block, no comm
     for s in range(1, p):
         perm = [(i, (i + s) % p) for i in range(p)]
-        recv.append(jax.lax.ppermute(pieces[s], axis, perm))
+        piece = jax.lax.ppermute(pieces[s], axis, perm)
+        if round_cb is not None:
+            # round-indexed observability hook (repro.obs): must return the
+            # piece (possibly wrapped); the default None emits identical HLO
+            piece = round_cb(s, piece)
+        recv.append(piece)
     # concat order [round 0, round P-1, ..., round 1] puts the piece from
     # src (idx + m) % P at block m; rotating by -idx restores src order.
     ordered = [recv[0]] + recv[:0:-1]
@@ -594,7 +624,8 @@ def _pairwise_transpose(blk: jax.Array, axis: AxisName, split_axis: int,
 
 
 def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
-                concat_axis: int, impl: str = "alltoall") -> jax.Array:
+                concat_axis: int, impl: str = "alltoall",
+                ring_round_cb=None) -> jax.Array:
     """Global transpose along one communicator.
 
     ``impl="alltoall"``  one fused collective (CROFT's MPI_Alltoall).
@@ -614,7 +645,8 @@ def _all_to_all(blk: jax.Array, axis: AxisName, split_axis: int,
     if isinstance(axis, tuple):
         raise ValueError(f"{impl} transpose supports single mesh axes only")
     if impl == "ring":
-        return _ring_transpose(blk, axis, split_axis, concat_axis)
+        return _ring_transpose(blk, axis, split_axis, concat_axis,
+                               round_cb=ring_round_cb)
     return _pairwise_transpose(blk, axis, split_axis, concat_axis)
 
 
@@ -635,11 +667,32 @@ def stage_pre(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
     return blk
 
 
-def stage_comm(blk: jax.Array, st: Stage, opts, off: int = 0) -> jax.Array:
+def stage_comm(blk: jax.Array, st: Stage, opts, off: int = 0,
+               ring_round_cb=None) -> jax.Array:
     """The collective leg of one stage (the global transpose); the
-    counterpart of :func:`stage_pre`."""
+    counterpart of :func:`stage_pre`.  ``ring_round_cb(round, piece)``,
+    when given and the stage resolves to the ring impl, is invoked on each
+    of the P-1 received pieces so ``repro.obs`` can tag per-round spans."""
     return _all_to_all(blk, st.comm_axis, st.split_axis + off,
-                       st.concat_axis + off, opts.transpose_impl)
+                       st.concat_axis + off, stage_transpose_impl(st, opts),
+                       ring_round_cb=ring_round_cb)
+
+
+def ring_round(blk: jax.Array, st: Stage, opts, rnd: int,
+               off: int = 0) -> jax.Array:
+    """One ring-transpose round of a comm stage, as a standalone jittable
+    unit: the fused rotated pack plus round ``rnd``'s single ppermute
+    (round 0 is the rank's own piece — no wire traffic).  Returns the
+    received piece without placing it; production execution stays in
+    :func:`stage_comm`.  Used by ``repro.obs.instrument`` to time ring
+    stages round by round."""
+    axis = st.comm_axis
+    pieces = _pack_pieces(blk, axis, st.split_axis + off)
+    if rnd == 0:
+        return pieces[0]
+    p = axis_size(axis)
+    perm = [(i, (i + rnd) % p) for i in range(p)]
+    return jax.lax.ppermute(pieces[rnd], axis, perm)
 
 
 def stage_category(st: Stage) -> str:
@@ -654,7 +707,7 @@ def stage_category(st: Stage) -> str:
 
 
 def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
-              ctx=None) -> jax.Array:
+              ctx=None, ring_round_cb=None) -> jax.Array:
     """Execute one stage on a local block (axis indices offset by ``off``
     for leading batch dims).  Owns the K-chunked overlap and the silent
     fallback to one chunk when ``chunk_axis`` is not divisible by K.
@@ -676,11 +729,11 @@ def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
         return stage_pre(c, st, sign, opts, off, ctx)
 
     def comm(c):
-        return stage_comm(c, st, opts, off)
+        return stage_comm(c, st, opts, off, ring_round_cb=ring_round_cb)
 
     if st.comm_axis is None:
         return pre(blk)  # nothing to overlap with: never chunked
-    k = opts.overlap_k
+    k = stage_overlap_k(st, opts)
     if k <= 1 or blk.shape[st.chunk_axis + off] % k:
         return comm(pre(blk))
     ax = st.chunk_axis + off
@@ -699,17 +752,20 @@ def run_stage(blk: jax.Array, st: Stage, sign: int, opts, off: int = 0,
 
 
 def run_schedule(blk: jax.Array, sched: Schedule, opts,
-                 operands=None) -> jax.Array:
+                 operands=None, ring_round_cb=None) -> jax.Array:
     """Execute a schedule on a local (shard_map) block.
 
     Leading batch axes are carried along unsharded: every axis index in
     the schedule is offset by ``blk.ndim - 3``.  ``operands`` supplies
     named blocks to ops that need them (e.g. the fused k-space filter).
+    ``ring_round_cb(round, piece)`` is the observability hook threaded to
+    every ring-impl transpose (see :func:`stage_comm`).
     """
     off = blk.ndim - 3
     ctx = dict(operands or {})
     for st in sched.stages:
-        blk = run_stage(blk, st, sched.sign, opts, off, ctx)
+        blk = run_stage(blk, st, sched.sign, opts, off, ctx,
+                        ring_round_cb=ring_round_cb)
     for op in sched.epilogue:
         blk = op.apply(blk, opts, ctx, off)
     return blk

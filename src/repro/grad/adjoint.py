@@ -266,8 +266,11 @@ def adjoint_schedule(sched: Schedule) -> Schedule:
         # transposed tiled all_to_all: same communicator, split<->concat
         # swapped; the chunk axis is uninvolved in {split, concat} (an
         # unchanged set), so it stays valid for the adjoint's K-chunking.
+        # Per-stage impl/K overrides (searched schedules) ride along: the
+        # adjoint of a ring stage is a ring stage over the same wire.
         return dict(comm_axis=st.comm_axis, split_axis=st.concat_axis,
-                    concat_axis=st.split_axis, chunk_axis=st.chunk_axis)
+                    concat_axis=st.split_axis, chunk_axis=st.chunk_axis,
+                    transpose_impl=st.transpose_impl, overlap_k=st.overlap_k)
 
     stages = []
     # the terminal epilogue transposes into ops that run FIRST

@@ -83,10 +83,9 @@ def trace_forward(plan, x, tracer=None, iters: int = 3,
     """
     if tracer is None:
         tracer = tracer_lib.get_tracer()
-    from repro.tuning.candidates import Candidate
-    cand = Candidate(plan.decomp, plan.opts, problem=plan.problem,
-                     strategy=plan.strategy) if plan.decomp is not None \
-        else None
+    # plan.candidate() — not a hand-built Candidate — so searched
+    # schedules attribute under their own pipeline identity/model rows
+    cand = plan.candidate() if plan.decomp is not None else None
     label = label or (cand.label if cand is not None else "meshless")
 
     with tracer.span("e2e", "plan", plan=label):
@@ -148,13 +147,15 @@ def trace_forward(plan, x, tracer=None, iters: int = 3,
         row["wall_s"] = wall
 
         if st.comm_axis is not None:
-            fft_s, comm_s = _split_legs(
+            fft_s, comm_s, rounds = _split_legs(
                 tracer, plan, sched, i, st, pts, cur, row["k_eff"], iters,
                 label)
             hidden = min(max(fft_s + comm_s - wall, 0.0), comm_s)
             row.update(fft_s=fft_s, comm_s=comm_s, hidden_s=hidden,
                        measured_efficiency=(hidden / comm_s if comm_s
                                             else None))
+            if rounds:
+                row["rounds"] = rounds
             total_c += comm_s
             total_hidden += hidden
         else:
@@ -175,7 +176,10 @@ def _split_legs(tracer, plan, sched, i, st, pts, cur, k, iters, label):
     """Serialized compute/collective leg times of comm stage ``i``:
     per-K-chunk executables for :func:`stage_pre` / :func:`stage_comm`
     (chunking is local, exactly as the executor slices), summed over
-    chunks."""
+    chunks.  For ring/pairwise stages the collective leg is additionally
+    split into its P-1 ppermute rounds (:func:`schedule.ring_round`,
+    chunk 0 only), so the trace shows where inside the ring the stage's
+    wall time goes; returns ``(fft_s, comm_s, rounds)``."""
     mesh, opts = plan.mesh, plan.opts
     axis_sizes = dict(mesh.shape)
     ax = st.chunk_axis
@@ -186,6 +190,7 @@ def _split_legs(tracer, plan, sched, i, st, pts, cur, k, iters, label):
     chunk_shape[ax] = cur.shape[ax] // k
 
     fft_s = comm_s = 0.0
+    rounds = []
     for j in range(k):
         def pre_j(blk, st=st, j=j):
             c = jax.lax.slice_in_dim(blk, j * ck, (j + 1) * ck, axis=ax)
@@ -215,7 +220,29 @@ def _split_legs(tracer, plan, sched, i, st, pts, cur, k, iters, label):
             "collective", iters,
             {"stage": i, "plan": label, "part": "comm", "chunk": j, "k": k})
         comm_s += dt
-    return fft_s, comm_s
+
+        impl = schedule_lib.stage_transpose_impl(st, opts)
+        p = 1
+        for n in schedule_lib._flat(st.comm_axis):
+            p *= axis_sizes[n]
+        if j == 0 and impl in ("ring", "pairwise") and p > 1:
+            for rnd in range(1, p):
+                def round_r(blk, st=st, rnd=rnd):
+                    return schedule_lib.ring_round(blk, st, opts, rnd)
+
+                exe_round = _compile(
+                    tracer, shard_map(round_r, mesh=mesh,
+                                      in_specs=pts.comm.partition_spec(),
+                                      out_specs=pts.comm.partition_spec()),
+                    _sds(mesh, tuple(chunk_shape), plan.dtype, pts.comm),
+                    f"s{i}:{st.name}:round[{rnd}]")
+                rdt, _ = _timed(
+                    tracer, exe_round, (pre_out,),
+                    f"s{i}:{st.name}:round[{rnd}]", "collective", iters,
+                    {"stage": i, "plan": label, "part": "round",
+                     "round": rnd, "p": p})
+                rounds.append({"round": rnd, "wall_s": rdt})
+    return fft_s, comm_s, rounds
 
 
 def _attach(tracer, summary) -> None:

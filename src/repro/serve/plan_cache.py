@@ -62,6 +62,17 @@ class CachedPlan:
     last_used: int = 0           # monotonic use counter (LRU order)
     upgrading: bool = False
 
+    @property
+    def plan_token(self) -> str:
+        """The plan's pipeline identity (searched plans included) — what
+        batch-compatibility bucketing must key on, since two plans for
+        the same wisdom key stop being batchable the moment a background
+        upgrade swaps a searched pipeline in under one of them."""
+        try:
+            return self.plan.candidate().plan_key
+        except Exception:
+            return self.key  # meshless plans carry no candidate identity
+
 
 class PlanCache:
     """LRU plan cache keyed by the wisdom problem key.
@@ -108,6 +119,22 @@ class PlanCache:
             return wisdom_key(shape, {}, jnp.dtype(dtype), "local", problem)
         return wisdom_key(shape, dict(self.mesh.shape), jnp.dtype(dtype),
                           jax.default_backend(), problem)
+
+    def token_for(self, shape, dtype, problem: str) -> str:
+        """Batch-bucket token for (shape, dtype, problem): the wisdom key
+        while the plan is unbuilt (cold requests for one key can always
+        bucket together — they will share whatever plan the miss builds),
+        extended with the built plan's pipeline token afterwards.  The
+        wisdom-key prefix keeps shape/dtype separation; the plan-token
+        suffix splits buckets when an upgrade swaps in a different
+        pipeline (e.g. a searched schedule), since requests batched into
+        one vmapped call must share one executable."""
+        key = self.key_for(shape, dtype, problem)
+        with self._lock:
+            cp = self._plans.get(key)
+        if cp is None:
+            return key
+        return f"{key}@{cp.plan_token}"
 
     # -- lookup/build -------------------------------------------------------
     def get(self, shape, dtype=jnp.complex64, problem: str = "c2c"
@@ -215,7 +242,8 @@ class PlanCache:
                 plan = Croft3D(cp.plan.shape, self.mesh, result.decomp,
                                result.opts, dtype=cp.plan.dtype,
                                problem=cp.plan.problem,
-                               strategy=result.strategy)
+                               strategy=result.strategy,
+                               schedule=getattr(result, "schedule", None))
                 plan.tune_result = result
             with self._lock:
                 old = self._plans.get(cp.key)

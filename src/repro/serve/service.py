@@ -187,7 +187,10 @@ class TransformService:
                 self._dispatch(bucket)
 
     def _bucket_key(self, req: TransformRequest) -> str:
-        return bucket_key(req, self.cache.key_for(
+        # token_for (not key_for): once a plan is built the bucket key
+        # carries its pipeline token, so requests never co-batch across
+        # an upgrade that swapped in a different (e.g. searched) pipeline
+        return bucket_key(req, self.cache.token_for(
             req.shape, req.dtype, req.plan_problem))
 
     def _drain_all(self) -> None:

@@ -170,6 +170,11 @@ def schedule_for(shape: Sequence[int], cand: Candidate) -> Schedule:
     collective.
     """
     from repro.tuning.candidates import split_grad
+    build = getattr(cand, "build_schedule", None)
+    if build is not None:
+        # searched pipeline: the candidate IS the schedule (stage list +
+        # per-stage overrides); nothing to re-derive from the builders
+        return build()
     base_problem, _ = split_grad(cand.problem)
     if base_problem == "r2c" and cand.strategy == "packed":
         from repro.real import pipeline as real_pipeline
@@ -218,6 +223,9 @@ def analytic_cost(shape: Sequence[int], cand: Candidate,
 def _schedule_cost(shape: Sequence[int], cand: Candidate, sched: Schedule,
                    axis_sizes: Mapping[str, int],
                    dtype=jnp.complex64, batch: int = 1) -> CostBreakdown:
+    if getattr(cand, "is_schedule", False):
+        return _searched_schedule_cost(shape, cand, sched, axis_sizes,
+                                       dtype, batch)
     decomp, opts = cand.decomp, cand.opts
     itemsize = jnp.dtype(dtype).itemsize
     p = decomp.n_procs(axis_sizes)
@@ -302,6 +310,113 @@ def _schedule_cost(shape: Sequence[int], cand: Candidate, sched: Schedule,
         transpose_overhead_s=transpose_overhead_s)
 
 
+def _searched_schedule_cost(shape: Sequence[int], cand, sched: Schedule,
+                            axis_sizes: Mapping[str, int],
+                            dtype=jnp.complex64,
+                            batch: int = 1) -> CostBreakdown:
+    """Per-stage §5.1 combine for searched pipelines.
+
+    The legacy formula prices the whole schedule with one global
+    ``max(busy, collective)`` — fine for homogeneous knobs, but it can
+    hide a stage that *cannot* overlap (chunk-indivisible alltoall)
+    under another stage's compute, which the per-stage measurements
+    (``repro.obs.report``) show is not physical.  Searched schedules mix
+    impls and K per stage, so each stage's overlap is priced against its
+    OWN legs — the same decomposition :func:`per_stage_costs` reports —
+    and the stage times sum.  Fixed-builder candidates keep the legacy
+    combine so existing rankings and pins are bit-identical.
+    """
+    from repro.core.schedule import _flat, stage_transpose_impl
+    opts = cand.opts
+    itemsize = jnp.dtype(dtype).itemsize
+    p = cand.decomp.n_procs(axis_sizes)
+    alpha, beta = collective_constants()
+
+    flops = 0.0
+    compute_s = 0.0
+    for impl_stage, elems, n_fft in sched.fft_events(shape, axis_sizes):
+        f = 5.0 * elems * math.log2(n_fft)
+        flops += f
+        eff = IMPL_EFFICIENCY.get(opts.stage_impl(impl_stage),
+                                  _DEFAULT_EFFICIENCY)
+        compute_s += f / (PEAK_FLOPS * eff)
+    flops *= batch
+    compute_s *= batch
+
+    local_bytes = sched.layout_in.bytes(shape, axis_sizes, itemsize) * batch
+    memory_s = LOCAL_PASSES * local_bytes / HBM_BW
+
+    events = sched.comm_events(shape, axis_sizes, itemsize)
+    coll_bytes = float(sum(ev["bytes"] for ev in events)) * batch
+    collective_s = coll_bytes * beta
+
+    eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
+    comm_stages = iter(sched.comm_stages())
+    n_coll = 0
+    transpose_overhead_s = 0.0
+    for ev in events:
+        if not ev["chunkable"]:
+            n_coll += 1
+            continue
+        _, st = next(comm_stages)
+        impl = stage_transpose_impl(st, opts)
+        k_eff = next(eff_ks)
+        ops = (ev["comm_size"] - 1) if impl in ("ring", "pairwise") else 1
+        n_coll += k_eff * ops
+        ev_bytes = ev["bytes"] * batch
+        if impl == "ring":
+            transpose_overhead_s += 2 * ev_bytes / HBM_BW
+        elif impl == "pairwise":
+            transpose_overhead_s += (ev["comm_size"] - 1) * ev_bytes / HBM_BW
+    latency_s = n_coll * alpha
+
+    replan_s = 0.0
+    if not opts.plan_cache:
+        replan_s = REPLAN_PASSES * local_bytes / HBM_BW
+
+    # the per-stage combine: each stage hides the smaller of its own two
+    # legs when it pipelines (ring overhead is already inside the rows'
+    # compute leg; the pairwise chain rides in compute and never hides)
+    rows = _stage_rows(shape, cand, sched, axis_sizes, dtype, batch, "fwd")
+    staged = 0.0
+    for r in rows:
+        c, coll = r["compute_s"], r["collective_s"]
+        if r["overlaps"]:
+            staged += max(c, coll) + 0.1 * min(c, coll)
+        else:
+            staged += c + coll
+    total = staged + latency_s + replan_s
+
+    return CostBreakdown(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        latency_s=latency_s, replan_s=replan_s, total_s=total, flops=flops,
+        local_bytes=float(local_bytes), collective_bytes=float(coll_bytes),
+        n_collectives=n_coll, n_procs=p,
+        transpose_overhead_s=transpose_overhead_s)
+
+
+def predicted_collectives(sched: Schedule, shape: Sequence[int],
+                          axis_sizes: Mapping[str, int], opts) -> dict:
+    """Per-kind collective-op counts the executor will emit for this
+    schedule — what ``benchmarks/search_bench.py`` pins compiled HLO
+    against: one ``all-to-all`` per effective chunk of a fused stage,
+    ``K_eff * (P-1)`` ``collective-permute`` rounds for ring/pairwise,
+    one fused all-to-all per out-of-body reshard."""
+    from repro.core.schedule import _flat, stage_transpose_impl
+    sizes = dict(axis_sizes)
+    counts = {"all-to-all": 0, "collective-permute": 0}
+    eff = sched.effective_k(shape, axis_sizes, opts.overlap_k)
+    for (_, st), k_eff in zip(sched.comm_stages(), eff):
+        impl = stage_transpose_impl(st, opts)
+        csize = math.prod(sizes[n] for n in _flat(st.comm_axis))
+        if impl == "alltoall":
+            counts["all-to-all"] += k_eff
+        else:
+            counts["collective-permute"] += k_eff * (csize - 1)
+    counts["all-to-all"] += len(sched.extra_comms)
+    return counts
+
+
 def per_stage_costs(shape: Sequence[int], cand: Candidate,
                     axis_sizes: Mapping[str, int],
                     dtype=jnp.complex64, batch: int = 1) -> list:
@@ -332,11 +447,11 @@ def _stage_rows(shape, cand, sched, axis_sizes, dtype, batch,
                 direction) -> list:
     opts = cand.opts
     itemsize = jnp.dtype(dtype).itemsize
-    impl = opts.transpose_impl
     _, beta = collective_constants()
     eff_ks = iter(sched.effective_k(shape, axis_sizes, opts.overlap_k))
 
-    from repro.core.schedule import _flat, stage_category
+    from repro.core.schedule import (_flat, stage_category,
+                                     stage_transpose_impl)
     n_local = sum(1 for st in sched.stages
                   if st.fft_axis is not None or st.prologue or st.epilogue)
     mem_passes = LOCAL_PASSES / max(1, n_local)
@@ -360,6 +475,7 @@ def _stage_rows(shape, cand, sched, axis_sizes, dtype, batch,
         k_eff = 1
         overlaps = False
         if st.comm_axis is not None:
+            impl = stage_transpose_impl(st, opts)
             ev_bytes = pts.comm.bytes(shape, axis_sizes, itemsize) * batch
             collective_s = ev_bytes * beta
             k_eff = next(eff_ks)
@@ -376,6 +492,8 @@ def _stage_rows(shape, cand, sched, axis_sizes, dtype, batch,
             "name": st.name,
             "direction": direction,
             "category": stage_category(st),
+            "impl": (stage_transpose_impl(st, opts)
+                     if st.comm_axis is not None else None),
             "compute_s": compute_s,
             "collective_s": collective_s,
             "k_eff": k_eff,

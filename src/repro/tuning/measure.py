@@ -125,7 +125,9 @@ def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
                 base_problem, is_grad = split_grad(cand.problem)
                 plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
                                dtype=jnp.dtype(dtype), problem=base_problem,
-                               strategy=cand.strategy)
+                               strategy=getattr(cand, "strategy", None),
+                               schedule=cand if getattr(cand, "is_schedule",
+                                                        False) else None)
                 timer = time_train_step if is_grad else time_forward
                 t = timer(plan, warmup=warmup, iters=iters, batch=batch)
             except Exception:

@@ -49,11 +49,16 @@ class TuneResult:
     wisdom_path: Optional[str] = None
     problem: str = "c2c"
     strategy: Optional[str] = None  # r2c: "packed" | "embed"
+    # set when the winner came out of the schedule search (search=
+    # "schedule") and is not expressible as a fixed (decomp, opts) pair;
+    # pass it to Croft3D(schedule=...) — decomp/opts above then only
+    # describe the data placement, not the pipeline
+    schedule: Optional[object] = None
 
     def summary(self) -> str:
-        best = cand_lib.Candidate(self.decomp, self.opts,
-                                  problem=self.problem,
-                                  strategy=self.strategy)
+        best = self.schedule or cand_lib.Candidate(
+            self.decomp, self.opts, problem=self.problem,
+            strategy=self.strategy)
         t = (f"{self.measured_s * 1e6:.0f}us measured"
              if self.measured_s is not None else
              f"{self.model_s * 1e6:.0f}us modeled"
@@ -75,7 +80,7 @@ def tune(shape: Sequence[int], mesh=None, *,
          wisdom_path: Optional[str] = None, include_baselines: bool = False,
          heterogeneous_impls: bool = False, problem: str = "c2c",
          batch: int = 1, measure_iters: int = 5, measure_warmup: int = 2,
-         save: bool = True) -> TuneResult:
+         save: bool = True, search: str = "options") -> TuneResult:
     """Pick (Decomposition, FFTOptions) for a 3-D FFT problem.
 
     ``mode="measure"`` requires a live ``mesh``; the other modes accept a
@@ -93,9 +98,23 @@ def tune(shape: Sequence[int], mesh=None, *,
     ``|b{B}`` dimension (``batch=1`` keeps the legacy key format, so old
     wisdom files still hit), and ``mode="measure"`` times the *vmapped*
     transform over B stacked fields — the same thing the caller will run.
+
+    ``search="schedule"`` widens the pool past (decomp, opts) knob tuples:
+    the enumerator in :mod:`repro.tuning.candidates` generates candidate
+    *pipelines* directly — alternative transpose orders, per-stage
+    transpose impls and per-stage K — pruned by symbolic layout
+    propagation.  c2c / c2c_grad only; the winner (when it is not a plan
+    a fixed builder could have produced) rides back on
+    ``TuneResult.schedule``.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if search not in ("options", "schedule"):
+        raise ValueError(f'search must be "options" or "schedule", '
+                         f'got {search!r}')
+    if search == "schedule" and cand_lib.split_grad(problem)[0] != "c2c":
+        raise ValueError('search="schedule" covers c2c/c2c_grad only — '
+                         'r2c packing stages are not in the enumerator')
     if mode == "measure" and mesh is None:
         raise ValueError('mode="measure" needs a live mesh to time on')
     sizes = _resolve_axis_sizes(mesh, axis_sizes)
@@ -122,12 +141,21 @@ def tune(shape: Sequence[int], mesh=None, *,
                          "measured_s": hit.measured_s}],
                 model_s=hit.model_s, measured_s=hit.measured_s,
                 wisdom_path=wis.path, problem=cand.problem,
-                strategy=cand.strategy)
+                strategy=cand.strategy,
+                schedule=cand if getattr(cand, "is_schedule", False)
+                else None)
         mode = "model"  # miss: estimate now, remember below
 
     cands = cand_lib.enumerate_candidates(
         shape, sizes, include_baselines=include_baselines,
         heterogeneous_impls=heterogeneous_impls, problem=problem)
+    if search == "schedule":
+        cands = list(cands) + list(cand_lib.enumerate_schedule_candidates(
+            shape, sizes, problem=problem))
+    # distinct spec tuples can serialize to the same plan token (a
+    # homogeneous per-stage override is the same pipeline as the scalar
+    # knob) — collapse them so nothing gets costed or measured twice
+    cands = cand_lib.dedupe_candidates(cands)
     if not cands:
         raise ValueError(
             f"no valid decomposition for shape={tuple(shape)} over mesh "
@@ -146,7 +174,10 @@ def tune(shape: Sequence[int], mesh=None, *,
         result = TuneResult(decomp=best.decomp, opts=best.opts,
                             source="model", key=key, ranked=ranked,
                             model_s=bcost.total_s, wisdom_path=wis.path,
-                            problem=best.problem, strategy=best.strategy)
+                            problem=best.problem,
+                            strategy=getattr(best, "strategy", None),
+                            schedule=best if getattr(best, "is_schedule",
+                                                     False) else None)
     else:  # measure
         pool = [c for c, _ in scored[:max(1, top_k)]]
         default = cand_lib.default_candidate(shape, sizes, problem=problem)
@@ -187,12 +218,17 @@ def tune(shape: Sequence[int], mesh=None, *,
                 Croft3D(tuple(shape), mesh, best.decomp, best.opts,
                         dtype=jnp.dtype(dtype),
                         problem=cand_lib.split_grad(best.problem)[0],
-                        strategy=best.strategy))
+                        strategy=getattr(best, "strategy", None),
+                        schedule=best if getattr(best, "is_schedule",
+                                                 False) else None))
         result = TuneResult(decomp=best.decomp, opts=best.opts,
                             source="measure", key=key, ranked=ranked,
                             model_s=model_by_cand.get(best),
                             measured_s=best_t, wisdom_path=wis.path,
-                            problem=best.problem, strategy=best.strategy)
+                            problem=best.problem,
+                            strategy=getattr(best, "strategy", None),
+                            schedule=best if getattr(best, "is_schedule",
+                                                     False) else None)
 
     wis.record(key, entry)
     if save and wis.path:

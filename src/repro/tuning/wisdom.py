@@ -96,8 +96,17 @@ class WisdomEntry:
     created: Optional[float] = None
     problem: str = "c2c"            # "c2c" | "r2c"
     strategy: Optional[str] = None  # r2c: "packed" | "embed"
+    #: searched-schedule winners: the full ``sched:...`` plan token.  The
+    #: legacy fields above still describe the data placement, so wisdom
+    #: readers that predate the schedule search parse these entries as a
+    #: (decomp, opts) plan (from_json drops the unknown key); readers
+    #: that understand it reconstruct the exact pipeline from the token.
+    schedule: Optional[str] = None
 
     def candidate(self) -> Candidate:
+        if self.schedule is not None:
+            from repro.tuning.candidates import ScheduleCandidate
+            return ScheduleCandidate.from_plan_key(self.schedule)
         # tolerate opts written by other versions: unknown keys dropped
         known = {f.name for f in dataclasses.fields(FFTOptions)}
         opts = {k: v for k, v in self.opts.items() if k in known}
@@ -116,7 +125,9 @@ class WisdomEntry:
                    opts=dataclasses.asdict(cand.opts), source=source,
                    model_s=model_s, measured_s=measured_s, hlo=hlo,
                    created=time.time(), problem=cand.problem,
-                   strategy=cand.strategy)
+                   strategy=getattr(cand, "strategy", None),
+                   schedule=cand.plan_key
+                   if getattr(cand, "is_schedule", False) else None)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -356,11 +367,17 @@ def _main(argv=None) -> int:
         t = (f"{e.measured_s * 1e6:.0f}us measured" if e.measured_s is not None
              else f"{e.model_s * 1e6:.0f}us modeled" if e.model_s is not None
              else "?")
+        stages = None
         try:
-            label = e.candidate().label
+            cand = e.candidate()
+            label = cand.label
+            if getattr(cand, "is_schedule", False):
+                stages = cand.stage_summary()
         except (TypeError, ValueError):
             label = "<unreadable entry>"
         print(f"{key}\n    [{e.source}] {label} ({t})")
+        if stages is not None:
+            print(f"    stages: {stages}")
     print(f"{len(w)} entries")
     return 0
 
@@ -390,6 +407,7 @@ def _stats(path: str) -> int:
     by_source: dict[str, int] = {}
     by_problem: dict[str, int] = {}
     ages = []
+    n_sched = 0
     for key in sorted(w.entries):
         e = w.entries[key]
         by_source[e.source] = by_source.get(e.source, 0) + 1
@@ -401,13 +419,19 @@ def _stats(path: str) -> int:
              if e.measured_s is not None else
              f"{e.model_s * 1e6:.0f}us modeled"
              if e.model_s is not None else "unscored")
-        print(f"{key}\n    [{e.source}/{e.problem}] {t}, {_fmt_age(age)}")
+        tag = f"{e.source}/{e.problem}"
+        if e.schedule is not None:
+            n_sched += 1
+            tag += "/sched"
+        print(f"{key}\n    [{tag}] {t}, {_fmt_age(age)}")
     print(f"{len(w)} entries"
           + (f" in {path}" if os.path.exists(path) else " (file missing)"))
     print("  by mode:    " + (", ".join(
         f"{k}={v}" for k, v in sorted(by_source.items())) or "-"))
     print("  by problem: " + (", ".join(
         f"{k}={v}" for k, v in sorted(by_problem.items())) or "-"))
+    print(f"  searched:   {n_sched} schedule-keyed "
+          f"entr{'y' if n_sched == 1 else 'ies'}")
     if ages:
         ages.sort()
         print(f"  staleness:  newest {_fmt_age(ages[0])}, median "
