@@ -28,7 +28,7 @@ FULL_MODULES = ["benchmarks.fft_tables", "benchmarks.collective_profile",
                 "benchmarks.train_bench", "benchmarks.tuning_bench",
                 "benchmarks.search_bench", "benchmarks.rfft_bench",
                 "benchmarks.overlap_bench", "benchmarks.serve_bench",
-                "benchmarks.trace_smoke"]
+                "benchmarks.chaos_bench", "benchmarks.trace_smoke"]
 
 
 def main() -> None:
@@ -45,9 +45,9 @@ def main() -> None:
     if args.smoke:
         import os
 
-        from benchmarks import (collective_profile, overlap_bench,
-                                rfft_bench, serve_bench, trace_smoke,
-                                tuning_bench)
+        from benchmarks import (chaos_bench, collective_profile,
+                                overlap_bench, rfft_bench, serve_bench,
+                                trace_smoke, tuning_bench)
         tdir = args.trace
         if tdir:
             os.makedirs(tdir, exist_ok=True)
@@ -59,6 +59,7 @@ def main() -> None:
         serve_bench.run(
             smoke=True,
             trace=os.path.join(tdir, "serve_trace.json") if tdir else None)
+        chaos_bench.run(smoke=True)
         collective_profile.run(smoke=True)
         trace_smoke.run(smoke=True)
         return

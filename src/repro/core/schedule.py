@@ -768,6 +768,13 @@ def run_schedule(blk: jax.Array, sched: Schedule, opts,
                         ring_round_cb=ring_round_cb)
     for op in sched.epilogue:
         blk = op.apply(blk, opts, ctx, off)
+    # Fault plane: trace-time output poisoning.  ``corrupt`` is decided
+    # while tracing, so an unarmed (or unmatched) injector contributes
+    # zero ops — the compiled HLO is byte-identical to a build with no
+    # injector installed (pinned in tests/test_resil.py).
+    from repro.resil import inject
+    if inject.corrupt("exec.output", sched.name):
+        blk = blk * jnp.asarray(jnp.nan, dtype=blk.dtype)
     return blk
 
 

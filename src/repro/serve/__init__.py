@@ -27,12 +27,16 @@ batching gate.
 
 from repro.serve.batcher import Batcher, Bucket, padded_size, stack_and_pad
 from repro.serve.plan_cache import CachedPlan, CacheStats, PlanCache
-from repro.serve.request import (DIRECTIONS, PROBLEMS, TransformRequest,
+from repro.serve.request import (DIRECTIONS, PRIORITIES, PRIORITY_HIGH,
+                                 PRIORITY_LOW, PRIORITY_NORMAL, PROBLEMS,
+                                 ShedResult, TransformRequest,
                                  TransformResult, bucket_key)
 from repro.serve.service import TransformService
 
 __all__ = [
     "Batcher", "Bucket", "CacheStats", "CachedPlan", "DIRECTIONS",
-    "PROBLEMS", "PlanCache", "TransformRequest", "TransformResult",
-    "TransformService", "bucket_key", "padded_size", "stack_and_pad",
+    "PRIORITIES", "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL",
+    "PROBLEMS", "PlanCache", "ShedResult", "TransformRequest",
+    "TransformResult", "TransformService", "bucket_key", "padded_size",
+    "stack_and_pad",
 ]

@@ -25,7 +25,17 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.serve.request import TransformRequest
+from repro.serve.request import PRIORITY_NORMAL, TransformRequest
+
+
+def _priority(item) -> int:
+    """Priority of a pending item (the service queues ``_Pending``
+    wrappers; bare ``TransformRequest``s work too for direct users)."""
+    return getattr(getattr(item, "req", item), "priority", PRIORITY_NORMAL)
+
+
+def _req_id(item) -> int:
+    return getattr(getattr(item, "req", item), "req_id", 0)
 
 
 def padded_size(n: int, max_batch: int) -> int:
@@ -103,7 +113,29 @@ class Batcher:
                 ready.append(b)
         for b in ready:
             del self._buckets[b.key]
+        # high-priority buckets dispatch first when several are ready at
+        # once (a bucket's priority is its most important request's)
+        ready.sort(key=lambda b: min(_priority(r) for r in b.requests))
         return ready
+
+    def shed_lowest(self):
+        """Remove and return the least-important pending item: highest
+        priority value first, newest arrival (largest req_id) within a
+        class — so bounded-queue load shedding evicts the requests whose
+        SLO matters least and keeps the oldest of equals (closest to
+        dispatch).  None when nothing is pending."""
+        worst_b, worst_i, worst_key = None, None, None
+        for b in self._buckets.values():
+            for i, item in enumerate(b.requests):
+                key = (_priority(item), _req_id(item))
+                if worst_key is None or key > worst_key:
+                    worst_b, worst_i, worst_key = b, i, key
+        if worst_b is None:
+            return None
+        item = worst_b.requests.pop(worst_i)
+        if not worst_b.requests:
+            del self._buckets[worst_b.key]
+        return item
 
     def pop_all(self) -> list[Bucket]:
         """Drain every pending bucket (shutdown path)."""

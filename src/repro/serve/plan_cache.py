@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Optional
 
 import jax
@@ -31,6 +32,8 @@ import jax.numpy as jnp
 
 from repro.obs import metrics as metrics_lib
 from repro.obs import tracer as tracer_lib
+from repro.resil import degrade as degrade_lib
+from repro.resil import inject as inject_lib
 
 
 @dataclasses.dataclass
@@ -61,6 +64,18 @@ class CachedPlan:
     hits: int = 0
     last_used: int = 0           # monotonic use counter (LRU order)
     upgrading: bool = False
+    #: degradation-ladder rung serving this key ("primary" = tuner pick;
+    #: see repro.resil.degrade.RUNGS)
+    rung: str = "primary"
+    #: consecutive dispatch failures on this entry; at
+    #: PlanCache.quarantine_after the entry is quarantined and the
+    #: bucket re-routes to the next rung down
+    failures: int = 0
+    #: failed background upgrades; capped at upgrade_max_retries
+    upgrade_failures: int = 0
+    #: a quarantined key never re-arms the measurement upgrade (the
+    #: measured winner is the plan that just got it quarantined)
+    quarantined: bool = False
 
     @property
     def plan_token(self) -> str:
@@ -89,14 +104,20 @@ class PlanCache:
                  measure_after: Optional[int] = None,
                  upgrade_async: bool = True,
                  tune_kw: Optional[dict] = None,
-                 registry: Optional[metrics_lib.MetricsRegistry] = None):
+                 registry: Optional[metrics_lib.MetricsRegistry] = None,
+                 quarantine_after: int = 3,
+                 upgrade_max_retries: int = 2):
         if max_plans < 1:
             raise ValueError("max_plans must be >= 1")
+        if quarantine_after < 1:
+            raise ValueError("quarantine_after must be >= 1")
         self.mesh = mesh
         self.max_plans = max_plans
         self.wisdom_path = wisdom_path
         self.measure_after = measure_after
         self.upgrade_async = upgrade_async
+        self.quarantine_after = quarantine_after
+        self.upgrade_max_retries = upgrade_max_retries
         self.tune_kw = dict(tune_kw or {})
         self.stats = CacheStats()
         # lifecycle counters mirror CacheStats into the metrics registry
@@ -175,6 +196,24 @@ class PlanCache:
         cp.hits += 1
 
     def _build(self, key: str, shape, dtype, problem: str) -> CachedPlan:
+        try:
+            inject_lib.fire("plan.build", key)
+            return self._build_primary(key, shape, dtype, problem)
+        except Exception:
+            # a failed build must not fail the request if any ladder rung
+            # below the tuner's pick still builds (repro.resil.degrade);
+            # _build_fallback re-raises when nothing does
+            self.registry.counter("plan_build_failures").inc()
+            tracer_lib.get_tracer().instant("plan:build-fail", "plan",
+                                            {"key": key})
+            cp = self._build_fallback(key, shape, dtype, problem)
+            self.registry.counter("plan_build_fallbacks").inc()
+            tracer_lib.get_tracer().instant(
+                "plan:build-fallback", "plan", {"key": key, "rung": cp.rung})
+            return cp
+
+    def _build_primary(self, key: str, shape, dtype,
+                       problem: str) -> CachedPlan:
         from repro.core.api import Croft3D
         if self.mesh is None:
             # single device: nothing to tune, and nothing to upgrade to
@@ -187,6 +226,24 @@ class PlanCache:
                     and plan.tune_result.measured_s is not None)
         return CachedPlan(plan=plan, key=key,
                           state="warm" if measured else "cold")
+
+    def _build_fallback(self, key: str, shape, dtype,
+                        problem: str) -> CachedPlan:
+        from repro.core.api import Croft3D
+        if self.mesh is None:
+            # the plain meshless plan IS the bottom rung; retry it
+            plan = Croft3D(shape, dtype=dtype, problem=problem)
+            return CachedPlan(plan=plan, key=key, state="warm",
+                              rung="default")
+        cand = degrade_lib.bottom_candidate(shape, dict(self.mesh.shape),
+                                            problem)
+        if cand is None:
+            raise RuntimeError(f"no fallback plan for {key}: even the "
+                               "default decomposition is invalid")
+        plan = Croft3D(shape, self.mesh, cand.decomp, cand.opts,
+                       dtype=dtype, problem=problem,
+                       strategy=getattr(cand, "strategy", None))
+        return CachedPlan(plan=plan, key=key, state="cold", rung="default")
 
     def _evict_lru(self, keep: str) -> bool:
         """Evict the LRU evictable plan; False if none is evictable."""
@@ -203,10 +260,59 @@ class PlanCache:
         victim.plan.release()  # compile-cache hygiene
         return True
 
+    # -- failure reporting and quarantine ----------------------------------
+    def report_dispatch_failure(self, key: str) -> Optional[CachedPlan]:
+        """One dispatch on ``key``'s plan failed (after retries).  At
+        ``quarantine_after`` consecutive failures the entry is
+        quarantined: the next ladder rung is built and swapped in, its
+        plan token re-routes the bucket, and the failure counter resets
+        so the *new* rung gets its own budget before walking further
+        down.  Returns the (possibly replaced) entry."""
+        with self._lock:
+            cp = self._plans.get(key)
+            if cp is None:
+                return None
+            cp.failures += 1
+            self.registry.counter("plan_dispatch_failures").inc()
+            if cp.failures < self.quarantine_after:
+                return cp
+            return self._quarantine(cp)
+
+    def _quarantine(self, cp: CachedPlan) -> CachedPlan:
+        """Swap ``cp`` for the first ladder rung below it that builds.
+        Caller holds the lock."""
+        self.registry.counter("plan_quarantines").inc()
+        tracer_lib.get_tracer().instant(
+            "plan:quarantine", "plan",
+            {"key": cp.key, "rung": cp.rung, "failures": cp.failures})
+        for rung, cand in degrade_lib.ladder(cp.plan):
+            try:
+                plan = degrade_lib.build_plan(cp.plan, cand)
+            except Exception:
+                continue  # this rung does not build either; walk down
+            new = CachedPlan(plan=plan, key=cp.key, state="cold",
+                             hits=cp.hits, last_used=cp.last_used,
+                             rung=rung, quarantined=True,
+                             upgrade_failures=cp.upgrade_failures)
+            self._plans[cp.key] = new
+            self.registry.counter("plan_degradations").inc()
+            tracer_lib.get_tracer().instant(
+                "plan:degrade", "plan", {"key": cp.key, "rung": rung,
+                                         "plan": cand.label})
+            if cp.plan is not plan and not cp.upgrading:
+                cp.plan.release()  # compile-cache hygiene
+            return new
+        # bottom of the ladder (or meshless): keep serving the entry;
+        # callers keep seeing failures rather than a silent swallow
+        self.registry.counter("plan_degrade_exhausted").inc()
+        cp.failures = 0  # one quarantine event per quarantine_after burst
+        return cp
+
     # -- background measurement upgrade ------------------------------------
     def _maybe_upgrade(self, cp: CachedPlan) -> None:
         if (self.measure_after is None or self.mesh is None
-                or cp.state != "cold" or cp.upgrading
+                or cp.state != "cold" or cp.upgrading or cp.quarantined
+                or cp.upgrade_failures >= self.upgrade_max_retries
                 or cp.hits < self.measure_after):
             return
         cp.upgrading = True
@@ -234,6 +340,7 @@ class PlanCache:
         tracer = tracer_lib.get_tracer()
         try:
             with tracer.span("plan:upgrade", "plan", key=cp.key):
+                inject_lib.fire("plan.upgrade", cp.key)
                 from repro import tuning
                 result = tuning.upgrade_wisdom(
                     cp.plan.shape, self.mesh, dtype=cp.plan.dtype,
@@ -257,19 +364,46 @@ class PlanCache:
             tracer.instant("plan:upgrade-win", "plan",
                            {"key": cp.key, "plan": result.summary()})
         except Exception:
-            # an upgrade failure must never take the service down; the
-            # cold plan keeps serving and the next hit may retry
+            # an upgrade failure must never take the service down: roll
+            # the *current* map entry (cp may be stale if something
+            # swapped it meanwhile) back to its servable cold state, and
+            # cap retries — a deterministically failing measure mode must
+            # not re-arm on every Nth hit forever
             tracer.instant("plan:upgrade-fail", "plan", {"key": cp.key})
+            self.registry.counter("serve_upgrade_failures").inc()
             with self._lock:
                 cp.upgrading = False
+                cp.upgrade_failures += 1
+                cur = self._plans.get(cp.key)
+                if cur is not None and cur is not cp:
+                    cur.upgrading = False
+                    cur.upgrade_failures += 1
 
-    def wait_idle(self, timeout: Optional[float] = None) -> None:
-        """Join outstanding upgrade threads (tests and orderly shutdown)."""
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Join outstanding upgrade threads (tests and orderly shutdown).
+        True when every thread actually finished; False on a timed-out
+        join, so shutdown can tell "idle" from "still measuring" (a
+        leaked daemon thread dies with the process but should be
+        counted, not mistaken for a clean drain)."""
         with self._lock:
             threads = list(self._upgrade_threads)
-            self._upgrade_threads = [t for t in threads if t.is_alive()]
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        joined = True
         for t in threads:
-            t.join(timeout)
+            t.join(timeout if deadline is None
+                   else max(0.0, deadline - time.monotonic()))
+            joined = joined and not t.is_alive()
+        with self._lock:
+            self._upgrade_threads = [
+                t for t in self._upgrade_threads if t.is_alive()]
+        return joined
+
+    def alive_upgrades(self) -> int:
+        """Upgrade threads still running (leftovers after a timed-out
+        ``wait_idle``)."""
+        with self._lock:
+            return sum(1 for t in self._upgrade_threads if t.is_alive())
 
     # -- introspection ------------------------------------------------------
     def __len__(self) -> int:
@@ -285,6 +419,8 @@ class PlanCache:
         with self._lock:
             return {
                 "stats": self.stats.as_dict(),
-                "plans": {k: {"state": cp.state, "hits": cp.hits}
+                "plans": {k: {"state": cp.state, "hits": cp.hits,
+                              "rung": cp.rung, "failures": cp.failures,
+                              "quarantined": cp.quarantined}
                           for k, cp in self._plans.items()},
             }

@@ -33,6 +33,12 @@ import numpy as np
 PROBLEMS = ("c2c", "r2c", "filtered")
 DIRECTIONS = ("forward", "inverse")
 
+#: priority classes: lower value = more important.  Load shedding under
+#: a bounded queue rejects the highest-valued (least important) pending
+#: request first; dispatch ordering prefers lower-valued buckets.
+PRIORITY_HIGH, PRIORITY_NORMAL, PRIORITY_LOW = 0, 1, 2
+PRIORITIES = (PRIORITY_HIGH, PRIORITY_NORMAL, PRIORITY_LOW)
+
 _ids = itertools.count()
 
 
@@ -50,8 +56,35 @@ class TransformRequest:
     shape: Optional[tuple] = None
     #: spectrum dtype the plan computes in
     dtype: np.dtype = np.complex64
+    #: priority class (PRIORITY_HIGH/NORMAL/LOW): sheds last/first under
+    #: a bounded queue, dispatches first/last among ready buckets
+    priority: int = PRIORITY_NORMAL
+    #: seconds after submit by which dispatch must start; a request whose
+    #: deadline has passed when its batch forms resolves with a typed
+    #: ShedResult instead of running (None = no deadline)
+    deadline_s: Optional[float] = None
     req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
+
+    @property
+    def t_deadline(self) -> Optional[float]:
+        """Absolute dispatch deadline on the ``time.monotonic()`` clock."""
+        return (None if self.deadline_s is None
+                else self.t_submit + self.deadline_s)
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        td = self.t_deadline
+        if td is None:
+            return False
+        return (time.monotonic() if now is None else now) > td
+
+    def payload_finite(self) -> bool:
+        """True when every payload value (x, and h if present) is finite
+        — the NaN/Inf isolation predicate, checked only when a batch's
+        output came back non-finite (never on the happy path)."""
+        if not np.isfinite(self.x).all():
+            return False
+        return self.h is None or bool(np.isfinite(self.h).all())
 
     def __post_init__(self):
         if self.problem not in PROBLEMS:
@@ -82,6 +115,15 @@ class TransformRequest:
         if len(self.shape) != 3:
             raise ValueError(f"shape must be 3-D, got {self.shape}")
         self.dtype = np.dtype(self.dtype)
+        self.priority = int(self.priority)
+        if self.priority < 0:
+            raise ValueError(f"priority must be >= 0 (0 = most "
+                             f"important), got {self.priority}")
+        if self.deadline_s is not None:
+            self.deadline_s = float(self.deadline_s)
+            if self.deadline_s < 0:
+                raise ValueError(f"deadline_s must be >= 0, "
+                                 f"got {self.deadline_s}")
 
     @property
     def plan_problem(self) -> str:
@@ -153,3 +195,19 @@ class TransformResult:
     t_submit: float = 0.0
     t_dispatch: float = 0.0
     t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class ShedResult(TransformResult):
+    """A request the service *rejected* rather than ran — typed so
+    clients can tell load shedding from a transform failure and decide
+    to retry elsewhere/later.  Futures always resolve (never hang):
+    ``ok`` is False, ``value`` is None, and ``shed_reason`` says why:
+
+      "queue-full"  bounded-queue load shedding evicted it (lowest
+                    priority class first, newest first within a class)
+      "deadline"    its dispatch deadline passed before its batch formed
+      "preempted"   the service was draining for preemption/shutdown
+    """
+
+    shed_reason: str = ""

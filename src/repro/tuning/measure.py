@@ -122,6 +122,8 @@ def measure_candidate(shape: Sequence[int], mesh, cand: Candidate,
         with tracer_lib.get_tracer().span("measure:candidate", "plan",
                                           plan=cand.label, batch=batch):
             try:
+                from repro.resil import inject as inject_lib
+                inject_lib.fire("tune.measure", cand.label)
                 base_problem, is_grad = split_grad(cand.problem)
                 plan = Croft3D(tuple(shape), mesh, cand.decomp, cand.opts,
                                dtype=jnp.dtype(dtype), problem=base_problem,

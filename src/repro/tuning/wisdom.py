@@ -35,6 +35,7 @@ updates).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import threading
@@ -45,6 +46,7 @@ import numpy as np
 
 from repro.core.decomposition import Decomposition
 from repro.core.distributed import FFTOptions
+from repro.resil import inject as inject_lib
 from repro.tuning.candidates import Candidate
 
 WISDOM_VERSION = 1
@@ -158,6 +160,34 @@ class WisdomEntry:
         return other
 
 
+def _entries_checksum(entries_json: Mapping) -> str:
+    """Integrity checksum over the canonical entries JSON.  A store
+    whose stored checksum disagrees was truncated or bit-rotted (a
+    crashed writer cannot cause this — writes are temp-file + atomic
+    rename); it is moved aside and rebuilt from model mode."""
+    blob = json.dumps(entries_json, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def quarantine_corrupt(path: str) -> Optional[str]:
+    """Move a corrupt wisdom file aside to ``<path>.corrupt-<n>`` (first
+    free n) so the evidence survives for forensics while the planner
+    rebuilds from model mode.  Returns the new name, or None if another
+    process won the rename (or the move failed)."""
+    for n in range(1, 1000):
+        dst = f"{path}.corrupt-{n}"
+        if os.path.exists(dst):
+            continue
+        try:
+            os.rename(path, dst)  # atomic: exactly one mover wins
+        except OSError:
+            return None
+        from repro.obs import metrics as metrics_lib
+        metrics_lib.get_registry().counter("wisdom_corrupt_files").inc()
+        return dst
+    return None
+
+
 class Wisdom:
     """In-memory wisdom table with JSON import/export."""
 
@@ -169,20 +199,36 @@ class Wisdom:
     # -- persistence --------------------------------------------------------
     @classmethod
     def load(cls, path: Optional[str] = None) -> "Wisdom":
-        """Load from ``path`` (or $CROFT_WISDOM); missing file -> empty."""
+        """Load from ``path`` (or $CROFT_WISDOM); missing file -> empty.
+
+        A file that fails to parse, or whose stored ``checksum`` does
+        not match its entries, is *quarantined*: moved aside to
+        ``<path>.corrupt-<n>`` (see :func:`quarantine_corrupt`) so the
+        next planner run rebuilds clean wisdom from model mode instead
+        of tripping over the same corruption forever.  Files written
+        before the checksum existed load normally (no checksum field =
+        nothing to verify)."""
         path = path or os.environ.get(DEFAULT_PATH_ENV)
         w = cls(path=path)
         if path and os.path.exists(path):
             try:
                 with open(path) as f:
                     blob = json.load(f)
+                if not isinstance(blob, dict):
+                    raise ValueError("wisdom store is not a JSON object")
             except (OSError, ValueError):
+                quarantine_corrupt(path)
                 return w  # unreadable/corrupt file -> empty wisdom
-            if not isinstance(blob, dict):
-                return w
             if blob.get("version", 0) > WISDOM_VERSION:
-                return w  # from a newer version: treat as empty, re-tune
-            for key, d in blob.get("entries", {}).items():
+                # from a newer version: valid, just unknown — treat as
+                # empty and re-tune, but do NOT quarantine it
+                return w
+            entries_json = blob.get("entries", {})
+            want = blob.get("checksum")
+            if want is not None and want != _entries_checksum(entries_json):
+                quarantine_corrupt(path)
+                return w
+            for key, d in entries_json.items():
                 try:
                     w.entries[key] = WisdomEntry.from_json(d)
                 except (TypeError, ValueError):
@@ -194,11 +240,15 @@ class Wisdom:
         if not path:
             return None
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        blob = {"version": WISDOM_VERSION,
-                "entries": {k: e.to_json() for k, e in self.entries.items()}}
+        entries_json = {k: e.to_json() for k, e in self.entries.items()}
+        blob = {"version": WISDOM_VERSION, "entries": entries_json,
+                "checksum": _entries_checksum(entries_json)}
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1, sort_keys=True)
+        # chaos site: a writer killed here leaves the store intact plus a
+        # stale .tmp that the next locked merge cleans up
+        inject_lib.fire("wisdom.write.crash", path)
         os.replace(tmp, path)
         return path
 
@@ -299,6 +349,14 @@ def merge_entries(path: str, entries: Mapping[str, WisdomEntry]) -> int:
     """
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with _FileLock(path + ".lock"):
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            # stale temp from a writer killed between temp-write and
+            # rename; we hold the lock, so no live writer owns it
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
         w = Wisdom.load(path)
         w.path = path
         for key, entry in entries.items():

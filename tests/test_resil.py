@@ -1,0 +1,415 @@
+"""repro.resil: seeded fault injection, degradation ladders, hardening.
+
+Single-device tests drive the whole request-lifecycle surface (sheds,
+deadlines, retries, NaN isolation, preemption, upgrade rollback, wisdom
+integrity) on meshless plans; the distributed story — HLO byte-identity
+with an armed injector, executor-output poisoning, quarantine -> ladder
+degradation with bitwise fallback parity — runs once in an 8-virtual-
+device subprocess.
+"""
+
+import json
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Croft3D
+from repro.resil import (CrashMidWrite, FaultPlan, FaultSpec, InjectedFault,
+                         TransientFault, degrade, inject, injection,
+                         seeded_times)
+from repro.serve import (PRIORITY_HIGH, PRIORITY_LOW, PlanCache, ShedResult,
+                         TransformService)
+from repro.tuning import wisdom as wisdom_lib
+from repro.tuning.candidates import default_candidate
+from conftest import run_multidevice
+
+N = 8
+
+
+def _cplx(rng, n=N):
+    return (rng.randn(n, n, n) + 1j * rng.randn(n, n, n)).astype(np.complex64)
+
+
+def _entry(measured=None):
+    cand = default_candidate((8, 8, 8), {"y": 2, "z": 2})
+    return wisdom_lib.WisdomEntry.from_candidate(
+        cand, source="measure" if measured else "model",
+        model_s=1e-3, measured_s=measured)
+
+
+# --- fault plan mechanics ---------------------------------------------------
+
+def test_fault_plan_times_and_match_are_exact():
+    plan = FaultPlan([FaultSpec("serve.dispatch", times=(1,),
+                                kind="transient"),
+                      FaultSpec("plan.build", match="abc")])
+    assert plan.check("serve.dispatch", "k") is None      # idx 0: scripted off
+    spec, idx = plan.check("serve.dispatch", "k")         # idx 1: fires
+    assert idx == 1 and spec.kind == "transient"
+    assert plan.check("serve.dispatch", "k") is None      # idx 2: off again
+    # match filters BEFORE the index counts: non-matching keys are
+    # invisible to the spec's invocation stream
+    assert plan.check("plan.build", "xyz") is None
+    _spec, idx = plan.check("plan.build", "zzabczz")
+    assert idx == 0
+    assert plan.fired_counts() == {"serve.dispatch": 1, "plan.build": 1}
+    # explicit times predict exactly; times=None predicts None (unknown)
+    assert plan.predicted_counts() == {"serve.dispatch": 1,
+                                       "plan.build": None}
+    # un-scripted sites return None without bookkeeping
+    assert plan.check("wisdom.write.crash", "p") is None
+
+
+def test_fault_spec_validation_and_kinds():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("plan.build", kind="explode")
+    with injection([FaultSpec("tune.measure", times=(0,))]) as plan:
+        with pytest.raises(InjectedFault) as ei:
+            inject.fire("tune.measure", "lbl")
+        assert ei.value.site == "tune.measure" and ei.value.index == 0
+        inject.fire("tune.measure", "lbl")  # idx 1: no-op
+        assert plan.fired_counts() == {"tune.measure": 1}
+    assert inject.get_plan() is None  # injection() always disarms
+    with injection([FaultSpec("serve.dispatch", kind="transient"),
+                    FaultSpec("wisdom.write.crash", kind="crash")]):
+        with pytest.raises(TransientFault):
+            inject.fire("serve.dispatch", "b")
+        with pytest.raises(CrashMidWrite):
+            inject.fire("wisdom.write.crash", "p")
+    # disarmed: fire/corrupt are no-ops
+    inject.fire("serve.dispatch", "b")
+    assert inject.corrupt("exec.output", "s") is False
+
+
+def test_seeded_times_deterministic():
+    a = seeded_times(7, "serve.dispatch", 10, 3)
+    assert a == seeded_times(7, "serve.dispatch", 10, 3)
+    assert a != seeded_times(8, "serve.dispatch", 10, 3)
+    assert a != seeded_times(7, "plan.build", 10, 3)
+    assert len(a) == 3 and list(a) == sorted(set(a))
+    assert all(0 <= t < 10 for t in a)
+
+
+# --- degradation ladder (unit) ----------------------------------------------
+
+def test_degrade_ladder_walks_to_default():
+    axis_sizes = {"y": 2, "z": 2}
+    cand = default_candidate((8, 8, 8), axis_sizes)
+    bottom = degrade.bottom_candidate((8, 8, 8), axis_sizes)
+    assert bottom.opts.overlap_k == 1
+    assert bottom.opts.transpose_impl == "alltoall"
+    # stock candidate (K=2) sits one rung above the bottom
+    step = degrade.next_rung(cand, (8, 8, 8), axis_sizes)
+    assert step is not None and step[0] == "default"
+    assert step[1].plan_key == bottom.plan_key
+    # the bottom itself has nowhere to go
+    assert degrade.next_rung(bottom, (8, 8, 8), axis_sizes) is None
+    # packed r2c degrades to embed before the default rung
+    r2c = default_candidate((8, 8, 8), axis_sizes, problem="r2c")
+    if getattr(r2c, "strategy", None) == "packed":
+        rung, emb = degrade.next_rung(r2c, (8, 8, 8), axis_sizes)
+        assert rung == "embed" and emb.strategy == "embed"
+    rb = degrade.bottom_candidate((8, 8, 8), axis_sizes, problem="r2c")
+    assert rb.strategy == "embed"
+
+
+def test_degrade_meshless_plan_has_no_ladder():
+    assert degrade.ladder(Croft3D((N, N, N))) == []
+
+
+# --- plan-cache resilience (single device) ----------------------------------
+
+def test_plan_build_fault_falls_back_and_serves(rng):
+    cache = PlanCache()
+    with injection([FaultSpec("plan.build", times=(0,))]):
+        cp = cache.get((N, N, N))
+    assert cp.rung == "default"
+    snap = cache.registry.snapshot()
+    assert snap["plan_build_failures"]["value"] == 1
+    assert snap["plan_build_fallbacks"]["value"] == 1
+    x = _cplx(rng)
+    assert np.array_equal(np.asarray(cp.plan.forward(x)),
+                          np.asarray(Croft3D((N, N, N)).forward(x)))
+    # a fresh key after the scripted window builds primary again
+    cp2 = cache.get((N, N, 2 * N))
+    assert cp2.rung == "primary"
+
+
+def test_quarantine_exhausted_resets_failure_counter():
+    """A meshless plan has no ladder: quarantine bottoms out, counts one
+    exhaustion event, and resets the burst counter (bounded events)."""
+    cache = PlanCache(quarantine_after=3)
+    cp = cache.get((N, N, N))
+    for _ in range(3):
+        cache.report_dispatch_failure(cp.key)
+    snap = cache.registry.snapshot()
+    assert snap["plan_dispatch_failures"]["value"] == 3
+    assert snap["plan_quarantines"]["value"] == 1
+    assert snap["plan_degrade_exhausted"]["value"] == 1
+    assert cache._plans[cp.key].failures == 0
+    assert cache._plans[cp.key].plan is cp.plan  # still serving
+
+
+def test_upgrade_failure_rolls_back_and_caps_retries(rng):
+    """Satellite 1: a failing background upgrade must roll the entry back
+    to its servable cold state, count serve_upgrade_failures, and stop
+    re-arming after upgrade_max_retries."""
+    cache = PlanCache(measure_after=1, upgrade_async=False,
+                      upgrade_max_retries=2)
+    cp = cache.get((N, N, N))
+    cp.state = "cold"           # meshless plans are born warm; force the
+    cache.mesh = object()       # upgrade path (injection raises before
+    #                             anything touches the fake mesh)
+    with injection([FaultSpec("plan.upgrade")]) as plan:
+        for _ in range(5):
+            cache._maybe_upgrade(cache._plans[cp.key])
+        assert plan.fired_counts() == {"plan.upgrade": 2}  # capped
+    cur = cache._plans[cp.key]
+    assert cur.upgrade_failures == 2 and not cur.upgrading
+    assert cur.state == "cold"
+    snap = cache.registry.snapshot()
+    assert snap["serve_upgrade_failures"]["value"] == 2
+    assert snap["plan_cache_upgrade_starts"]["value"] == 2
+    x = _cplx(rng)  # the rolled-back entry still serves
+    assert np.array_equal(np.asarray(cur.plan.forward(x)),
+                          np.asarray(Croft3D((N, N, N)).forward(x)))
+
+
+def test_wait_idle_reports_timeout_and_prunes():
+    """Satellite 2: wait_idle says whether threads actually joined."""
+    cache = PlanCache()
+    assert cache.wait_idle(timeout=0.1) is True  # nothing outstanding
+    t = threading.Thread(target=lambda: time.sleep(0.5), daemon=True)
+    cache._upgrade_threads.append(t)
+    t.start()
+    assert cache.wait_idle(timeout=0.05) is False
+    assert cache.alive_upgrades() == 1
+    assert cache.wait_idle(timeout=10.0) is True
+    assert cache.alive_upgrades() == 0
+    assert cache._upgrade_threads == []
+
+
+# --- service request lifecycle (single device) ------------------------------
+
+def test_transient_dispatch_fault_retries_and_succeeds(rng):
+    with injection([FaultSpec("serve.dispatch", times=(0,),
+                              kind="transient")]):
+        with TransformService(max_batch=4, retry_backoff_s=0.0) as svc:
+            x = _cplx(rng)
+            got = svc.transform(x)
+            assert np.array_equal(got,
+                                  np.asarray(Croft3D((N, N, N)).forward(x)))
+            snap = svc.registry.snapshot()
+            assert snap["serve_dispatch_retries"]["value"] == 1
+            assert snap["serve_failures"]["value"] == 0
+
+
+def test_transient_fault_exhausts_retries_then_fails(rng):
+    with injection([FaultSpec("serve.dispatch", kind="transient")]):
+        with TransformService(max_batch=4, dispatch_retries=1,
+                              retry_backoff_s=0.0) as svc:
+            r = svc.submit(_cplx(rng)).result(timeout=60)
+            assert not r.ok and "TransientFault" in r.error
+            snap = svc.registry.snapshot()
+            assert snap["serve_dispatch_retries"]["value"] == 1
+            # the exhausted failure counts toward quarantine
+            assert snap["plan_dispatch_failures"]["value"] == 1
+
+
+def test_deadline_miss_resolves_typed_and_batchmates_survive(rng):
+    with TransformService(max_batch=4, max_wait_ms=20.0) as svc:
+        f_dead = svc.submit(_cplx(rng), deadline_s=0.0)
+        f_live = svc.submit(_cplx(rng))
+        rd = f_dead.result(timeout=60)
+        assert isinstance(rd, ShedResult) and rd.shed_reason == "deadline"
+        assert not rd.ok and "deadline" in rd.error
+        assert f_live.result(timeout=60).ok
+        assert svc.registry.snapshot()["serve_deadline_misses"]["value"] == 1
+
+
+def test_bounded_queue_sheds_lowest_priority_first(rng):
+    """max_queue=4 with 4 HIGH + 3 LOW pending: exactly the 3 LOWs shed
+    with a typed queue-full ShedResult; the HIGHs all serve on drain.
+    max_wait is huge so nothing dispatches until stop() — counts exact."""
+    with TransformService(max_batch=8, max_wait_ms=60000.0,
+                          max_queue=4) as svc:
+        highs = [svc.submit(_cplx(rng), priority=PRIORITY_HIGH)
+                 for _ in range(4)]
+        lows = [svc.submit(_cplx(rng), priority=PRIORITY_LOW)
+                for _ in range(3)]
+        shed = [f.result(timeout=60) for f in lows]  # resolve pre-stop:
+        #                                              a shed never hangs
+        assert all(isinstance(r, ShedResult)
+                   and r.shed_reason == "queue-full" for r in shed)
+        assert svc.registry.snapshot()["serve_shed_requests"]["value"] == 3
+    assert all(f.result(timeout=60).ok for f in highs)
+
+
+def test_nan_payload_isolated_healthy_batchmates_redispatch(rng):
+    """One NaN payload co-batched with two healthy requests: the poisoned
+    request fails typed, both batch-mates re-dispatch individually and
+    come back bitwise-equal to the direct transform."""
+    xs = [_cplx(rng) for _ in range(2)]
+    bad = _cplx(rng)
+    bad[0, 0, 0] = np.nan
+    ref = Croft3D((N, N, N))
+    with TransformService(max_batch=4, max_wait_ms=200.0) as svc:
+        fb = svc.submit(bad)
+        fh = [svc.submit(x) for x in xs]
+        rb = fb.result(timeout=120)
+        assert not rb.ok and "poisoned payload" in rb.error
+        for x, f in zip(xs, fh):
+            r = f.result(timeout=120)
+            assert r.ok, r.error
+            assert np.array_equal(r.value, np.asarray(ref.forward(x)))
+        snap = svc.registry.snapshot()
+        assert snap["serve_poisoned_requests"]["value"] == 1
+        assert snap["serve_poison_redispatches"]["value"] == 2
+
+
+def test_preemption_drains_and_refuses_new_work(rng):
+    """Satellite 3: SIGTERM flips the PreemptionHandler flag; the worker
+    serves everything pending, stops cleanly, and submit() refuses."""
+    from repro.train.fault import PreemptionHandler
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        svc = TransformService(max_batch=8, max_wait_ms=60000.0,
+                               preemption=PreemptionHandler())
+        svc.start()
+        futs = [svc.submit(_cplx(rng)) for _ in range(3)]
+        signal.raise_signal(signal.SIGTERM)
+        results = [f.result(timeout=120) for f in futs]
+        assert all(r.ok for r in results), [r.error for r in results]
+        t0 = time.monotonic()
+        while svc._worker.is_alive() and time.monotonic() - t0 < 30:
+            time.sleep(0.01)
+        assert not svc._worker.is_alive(), "worker did not stop after drain"
+        with pytest.raises(RuntimeError, match="not started"):
+            svc.submit(_cplx(rng))
+        assert svc.registry.snapshot()[
+            "serve_preemption_drains"]["value"] == 1
+        svc.stop()  # idempotent after the drain
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+# --- wisdom integrity -------------------------------------------------------
+
+def test_wisdom_checksum_corruption_quarantines_file(tmp_path):
+    path = str(tmp_path / "w.json")
+    wisdom_lib.merge_entries(path, {"ka": _entry()})
+    blob = json.load(open(path))
+    assert blob["checksum"] == wisdom_lib._entries_checksum(blob["entries"])
+    blob["entries"]["ka"]["model_s"] = 99.0  # tamper, keep stale checksum
+    json.dump(blob, open(path, "w"))
+    assert len(wisdom_lib.Wisdom.load(path)) == 0
+    assert os.path.exists(path + ".corrupt-1") and not os.path.exists(path)
+    with open(path, "w") as f:
+        f.write("{ not json")  # parse failure quarantines too
+    assert len(wisdom_lib.Wisdom.load(path)) == 0
+    assert os.path.exists(path + ".corrupt-2")
+
+
+def test_wisdom_legacy_and_newer_version_files(tmp_path):
+    path = str(tmp_path / "w.json")
+    wisdom_lib.merge_entries(path, {"kb": _entry()})
+    blob = json.load(open(path))
+    del blob["checksum"]  # pre-checksum file: nothing to verify
+    json.dump(blob, open(path, "w"))
+    assert sorted(wisdom_lib.Wisdom.load(path).entries) == ["kb"]
+    # a newer-version file is valid-but-unknown: empty, NOT quarantined
+    json.dump({"version": 99, "entries": {}}, open(path, "w"))
+    assert len(wisdom_lib.Wisdom.load(path)) == 0
+    assert os.path.exists(path)
+    assert not any(p.name.endswith(".corrupt-1")
+                   for p in tmp_path.iterdir())
+
+
+def test_wisdom_crash_mid_write_leaves_store_loadable(tmp_path):
+    """Satellite 4: a writer killed between temp-write and atomic rename
+    leaves the old store intact plus a stale .tmp; the next locked merge
+    cleans the temp and lands both entries."""
+    path = str(tmp_path / "w.json")
+    wisdom_lib.merge_entries(path, {"k1": _entry()})
+    with injection([FaultSpec("wisdom.write.crash", times=(0,),
+                              kind="crash")]):
+        with pytest.raises(CrashMidWrite):
+            wisdom_lib.merge_entries(path, {"k2": _entry(measured=1e-3)})
+    assert os.path.exists(path + ".tmp")  # the interrupted write
+    assert sorted(wisdom_lib.Wisdom.load(path).entries) == ["k1"]
+    wisdom_lib.merge_entries(path, {"k2": _entry(measured=1e-3)})
+    assert not os.path.exists(path + ".tmp")
+    assert sorted(wisdom_lib.Wisdom.load(path).entries) == ["k1", "k2"]
+    assert not os.path.exists(path + ".lock")
+
+
+# --- distributed: HLO pin, executor poisoning, ladder parity ----------------
+
+_MULTIDEVICE_CODE = """
+import dataclasses, os, tempfile
+import numpy as np, jax
+from repro.core import Croft3D, Decomposition, FFTOptions
+from repro.obs.metrics import MetricsRegistry
+from repro.resil import FaultSpec, degrade, injection
+from repro.serve import PlanCache, TransformService
+from repro.tuning import wisdom as wisdom_lib
+from repro.tuning.candidates import default_candidate
+
+mesh = jax.make_mesh((2, 4), ("y", "z"))
+N = 16
+dec = Decomposition("pencil", ("y", "z"))
+
+# HLO pin: an armed-but-unmatched injector contributes zero ops — a plan
+# compiled under it is byte-identical to one compiled with no injector
+pa = Croft3D((N, N, N), mesh, dec, FFTOptions(overlap_k=2))
+hlo_off = pa.lower_forward().compile().as_text()
+with injection([FaultSpec("exec.output", match="no-such-schedule")]):
+    pb = Croft3D((N, N, N), mesh, dec, FFTOptions(overlap_k=2))
+    hlo_on = pb.lower_forward().compile().as_text()
+assert hlo_on == hlo_off, "armed injector changed compiled HLO"
+
+# executor-output poisoning: finite input -> NaN output is treated as a
+# poisoned plan; at quarantine_after=1 the entry degrades to the bottom
+# rung, whose results must equal the direct fallback plan bit for bit
+wisdom = os.path.join(tempfile.mkdtemp(), "w.json")
+cand = default_candidate((N, N, N), {"y": 2, "z": 2})
+key = wisdom_lib.wisdom_key((N, N, N), {"y": 2, "z": 2}, np.complex64,
+                            jax.default_backend())
+wisdom_lib.merge_entries(wisdom, {key: wisdom_lib.WisdomEntry.from_candidate(
+    cand, source="measure", measured_s=1e-3)})
+
+reg = MetricsRegistry()
+cache = PlanCache(mesh, wisdom_path=wisdom, quarantine_after=1,
+                  registry=reg)
+svc = TransformService(mesh, max_batch=4, max_wait_ms=20.0, cache=cache,
+                       registry=reg)
+rng = np.random.RandomState(0)
+x = (rng.randn(N, N, N) + 1j * rng.randn(N, N, N)).astype(np.complex64)
+with svc:
+    with injection([FaultSpec("exec.output", kind="nan")]):
+        r = svc.submit(x).result(timeout=400)
+    assert not r.ok and "non-finite output" in r.error, r.error
+    snap = svc.registry.snapshot()
+    assert snap["serve_nan_outputs"]["value"] == 1
+    assert snap["plan_quarantines"]["value"] == 1
+    assert snap["plan_degradations"]["value"] == 1
+    cp = cache._plans[cache.key_for((N, N, N), np.complex64, "c2c")]
+    assert cp.rung == "default" and cp.quarantined
+    r2 = svc.submit(x).result(timeout=400)
+    assert r2.ok, r2.error
+    bottom = degrade.bottom_candidate((N, N, N), {"y": 2, "z": 2})
+    direct = Croft3D((N, N, N), mesh, bottom.decomp, bottom.opts)
+    ref = np.asarray(direct.forward(
+        jax.device_put(x, direct.input_sharding)))
+    assert np.array_equal(r2.value, ref), "degraded bucket != fallback plan"
+print("RESIL_MULTIDEVICE_OK")
+"""
+
+
+def test_resil_multidevice_poison_quarantine_parity():
+    out = run_multidevice(_MULTIDEVICE_CODE, n_devices=8, timeout=480)
+    assert "RESIL_MULTIDEVICE_OK" in out

@@ -354,6 +354,10 @@ def test_wisdom_cli_tolerates_grad_and_foreign_entries(tmp_path, capsys):
     assert key.endswith("|grad")
     blob["entries"][key.replace("|grad", "|hess")] = dict(d,
                                                           problem="c2c_hess")
+    # a foreign writer would not maintain this version's integrity
+    # checksum — drop it rather than ship a stale one (a *mismatching*
+    # checksum means corruption and is quarantined; see test_resil.py)
+    blob.pop("checksum", None)
     with open(path, "w") as f:
         json.dump(blob, f)
     assert wisdom_lib._main(["show", path]) == 0
